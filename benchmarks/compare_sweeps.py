@@ -1,0 +1,48 @@
+"""Compare two dry-run sweeps (baseline vs optimized) cell by cell —
+the §Perf before/after table at full-sweep granularity."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(d):
+    out = {}
+    for p in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def main(a="dryrun_baseline_v1", b="dryrun"):
+    ra, rb = load(os.path.join(BASE, a)), load(os.path.join(BASE, b))
+    keys = sorted(set(ra) & set(rb))
+    print(f"| arch | shape | mesh | roofline {a} | roofline {b} | Δ | "
+          "t_coll Δ | t_mem Δ |")
+    print("|---|---|---|---|---|---|---|---|")
+    gains = []
+    for k in keys:
+        x, y = ra[k], rb[k]
+        if x["status"] != "ok" or y["status"] != "ok":
+            continue
+        fx = x["roofline"]["roofline_fraction"]
+        fy = y["roofline"]["roofline_fraction"]
+        tcx, tcy = x["roofline"]["t_collective"], y["roofline"]["t_collective"]
+        tmx, tmy = x["roofline"]["t_memory"], y["roofline"]["t_memory"]
+        d = fy / fx if fx else float("inf")
+        gains.append(d)
+        print(f"| {k[0]} | {k[1]} | {k[2]} | {fx:.4f} | {fy:.4f} | "
+              f"{d:.2f}x | {tcx:.2f}->{tcy:.2f}s | {tmx:.1f}->{tmy:.1f}s |")
+    if gains:
+        import math
+        gm = math.exp(sum(math.log(g) for g in gains) / len(gains))
+        print(f"\n# geometric-mean roofline-fraction gain: {gm:.2f}x "
+              f"over {len(gains)} cells")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,84 @@
+"""Paper Fig. 6/7: runtime-overhead study.
+
+Measures the REAL section-algebra cost of the planner on this machine
+(Jacobi, 32 procs, 200 iterations) in three configurations:
+
+  full      — both §4.2 optimizations (history buffers + linear GDEF
+              compare + plan cache),
+  state-cmp — history buffers disabled (every call does the O(n) GDEF
+              structural compare),
+  no-cache  — plan cache cleared every call: every kernel call pays the
+              full Eqns (1)-(2) intersection cost (the paper's baseline
+              whose intersection overhead is ~19x the optimized one).
+
+Reports per-config wall time, plan-cache hit counts, and intersection-op
+counts — the Fig. 7 breakdown in counter form.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core import HDArrayRuntime, IDENTITY_2D, Box, stencil
+
+
+def _jacobi_rt(nproc: int):
+    rt = HDArrayRuntime(nproc, materialize=False)
+    shape = (2048, 2048)
+    interior = Box.make((1, shape[0] - 1), (1, shape[1] - 1))
+    part_data = rt.partition_row(shape)
+    part_work = rt.partition_row(shape, region=interior)
+    hA, hB = rt.create("A", shape), rt.create("B", shape)
+    for h in (hA, hB):
+        per = tuple(rt._clip_region_to_array(r, h)
+                    for r in rt.parts[part_data].regions)
+        h.record_write(per)
+    return rt, part_work, hA, hB
+
+
+def run_config(mode: str, nproc: int = 32, iters: int = 200):
+    rt, part, hA, hB = _jacobi_rt(nproc)
+    st4 = stencil(2, 1)
+    t0 = time.time()
+    for i in range(iters):
+        if mode == "no-cache":
+            rt.planner._cache.clear()
+        elif mode == "state-cmp":
+            for e in rt.planner._cache.values():
+                e.fixpoint_verified = False
+                e.last_period = None
+        rt.plan_only("jacobi1", part, [hA, hB],
+                     uses={"B": st4}, defs={"A": IDENTITY_2D})
+        rt.plan_only("jacobi2", part, [hA, hB],
+                     uses={"A": IDENTITY_2D}, defs={"B": IDENTITY_2D})
+    dt = time.time() - t0
+    s = rt.planner.stats
+    return {
+        "mode": mode, "nproc": nproc, "iters": iters, "wall_s": dt,
+        "plans_computed": s.plans_computed,
+        "hits_history": s.hits_history,
+        "hits_state_compare": s.hits_state_compare,
+        "intersect_ops": s.intersect_ops,
+        "state_compares": s.state_compares,
+        "gdef_updates": s.gdef_updates,
+    }
+
+
+def main():
+    rows = [run_config(m) for m in ("full", "state-cmp", "no-cache")]
+    base = rows[-1]["wall_s"]
+    print(f"{'mode':10s} {'wall_s':>8s} {'speedup':>8s} {'computed':>9s} "
+          f"{'hist-hit':>9s} {'cmp-hit':>8s} {'intersects':>11s}")
+    for r in rows:
+        print(f"{r['mode']:10s} {r['wall_s']:8.3f} {base/r['wall_s']:8.2f} "
+              f"{r['plans_computed']:9d} {r['hits_history']:9d} "
+              f"{r['hits_state_compare']:8d} {r['intersect_ops']:11d}")
+    with open("results/paper_overhead.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print("# -> results/paper_overhead.json "
+          "(paper Fig. 7: optimized intersection cost ~19x lower; here the "
+          "history-buffer path skips the set algebra entirely)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""The paper's six PolyBench/ACC benchmarks as HDArray programs
+(§5: GEMM, 2MM, Convolution, Jacobi, Covariance, Correlation).
+
+Each program runs in metadata-only mode (`plan_only`) so the paper-scale
+domains (10240², 20480x24080) cost nothing to "execute" — the planner
+produces the exact communication schedule either way, which is what
+Table 3 / Fig 4 / Fig 5 report.  The same programs execute for real at
+small n through the SimExecutor in tests/test_runtime_sim.py.
+
+Iterative benchmarks exploit the GDEF mechanism's key property: per-
+iteration communication volume becomes PERIODIC once the def/use state
+reaches a fixpoint (iteration 2).  `run_iterative` verifies periodicity
+and extrapolates to the paper's iteration counts exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (AbsoluteSpec, AccessSpec, Box, HDArrayRuntime,
+                        IDENTITY_2D, ROW_ALL, COL_ALL, SectionSet, stencil,
+                        trapezoid, balanced_triangular_rows)
+
+GIB = 1024.0 ** 3
+
+
+@dataclasses.dataclass
+class CommReport:
+    name: str
+    nproc: int
+    iters: int
+    total_bytes: float
+    per_iter_bytes: float
+    startup_bytes: float
+    kinds: Dict[str, float]
+    plans_cached: int
+    plans_computed: int
+
+    @property
+    def gib(self) -> float:
+        return self.total_bytes / GIB
+
+
+def _finish(name, rt, iters, startup, per_iter) -> CommReport:
+    kinds: Dict[str, float] = {}
+    for _k, _b, arrs in rt.comm_log:
+        for (_a, kind, b) in arrs:
+            if b:
+                kinds[kind] = kinds.get(kind, 0) + b
+    st = rt.planner.stats
+    total = startup + per_iter * iters
+    return CommReport(name, rt.nproc, iters, total, per_iter, startup, kinds,
+                      st.plans_cached, st.plans_computed)
+
+
+def run_iterative(name: str, rt: HDArrayRuntime, body: Callable[[int], None],
+                  iters: int, warm: int = 4) -> CommReport:
+    """Run `body` for `warm` iterations, check the per-iteration volume is
+    periodic from iteration 2, extrapolate to `iters`."""
+    vols: List[float] = []
+    for i in range(warm):
+        before = sum(b for _n, b, _a in rt.comm_log)
+        body(i)
+        vols.append(sum(b for _n, b, _a in rt.comm_log) - before)
+    steady = vols[2:]
+    assert all(abs(v - steady[0]) < 1e-6 for v in steady), \
+        f"{name}: volume not periodic after fixpoint: {vols}"
+    per_iter = steady[0]
+    startup = sum(vols[:2]) - 2 * per_iter
+    return _finish(name, rt, iters, startup, per_iter)
+
+
+# ----------------------------------------------------------------------
+# GEMM  (paper §3.2/§5: 10240^2, 100 iters, ROW partition)
+# ----------------------------------------------------------------------
+def gemm(nproc=32, n=10240, iters=100) -> CommReport:
+    rt = HDArrayRuntime(nproc, materialize=False)
+    part = rt.partition_row((n, n))
+    hA, hB, hC = (rt.create(s, (n, n)) for s in "abc")
+    # metadata-only write: record ownership without materializing data
+    for h in (hA, hB, hC):
+        per = tuple(rt._clip_region_to_array(part_region, h)
+                    for part_region in rt.parts[part].regions)
+        h.record_write(per)
+
+    def body(i):
+        rt.plan_only("gemm", part, [hA, hB, hC],
+                     uses={"a": ROW_ALL, "b": COL_ALL},
+                     defs={"c": IDENTITY_2D})
+    return run_iterative("GEMM", rt, body, iters)
+
+
+# ----------------------------------------------------------------------
+# 2MM  (D = A x B ; E = C x D, 100 iters; ROW vs COL partitioning)
+# ----------------------------------------------------------------------
+def two_mm(nproc=32, n=10240, iters=100, ptype="row") -> CommReport:
+    rt = HDArrayRuntime(nproc, materialize=False)
+    part = (rt.partition_row if ptype == "row" else rt.partition_col)((n, n))
+    hs = {s: rt.create(s, (n, n)) for s in "abcde"}
+    for h in hs.values():
+        per = tuple(rt._clip_region_to_array(r, h)
+                    for r in rt.parts[part].regions)
+        h.record_write(per)
+
+    def body(i):
+        rt.plan_only("mm1", part, [hs["a"], hs["b"], hs["d"]],
+                     uses={"a": ROW_ALL, "b": COL_ALL},
+                     defs={"d": IDENTITY_2D})
+        rt.plan_only("mm2", part, [hs["c"], hs["d"], hs["e"]],
+                     uses={"c": ROW_ALL, "d": COL_ALL},
+                     defs={"e": IDENTITY_2D})
+    return run_iterative(f"2MM-{ptype}", rt, body, iters)
+
+
+# ----------------------------------------------------------------------
+# Jacobi (two kernels w/ dependency) & Convolution (independent)
+# 20480 x 24080, 100k iters (paper); ROW partition, ghost cells
+# ----------------------------------------------------------------------
+def jacobi(nproc=32, shape=(20480, 24080), iters=100_000) -> CommReport:
+    rt = HDArrayRuntime(nproc, materialize=False)
+    n0, n1 = shape
+    interior = Box.make((1, n0 - 1), (1, n1 - 1))
+    part_data = rt.partition_row(shape)
+    part_work = rt.partition_row(shape, region=interior)
+    hA, hB = rt.create("A", shape), rt.create("B", shape)
+    for h in (hA, hB):
+        per = tuple(rt._clip_region_to_array(r, h)
+                    for r in rt.parts[part_data].regions)
+        h.record_write(per)
+    st4 = stencil(2, 1)
+
+    def body(i):
+        rt.plan_only("jacobi1", part_work, [hA, hB],
+                     uses={"B": st4}, defs={"A": IDENTITY_2D})
+        rt.plan_only("jacobi2", part_work, [hA, hB],
+                     uses={"A": IDENTITY_2D}, defs={"B": IDENTITY_2D})
+    return run_iterative("Jacobi", rt, body, iters)
+
+
+def convolution(nproc=32, shape=(20480, 24080), iters=100_000) -> CommReport:
+    """8-neighbor conv, NO inter-iteration dependency: after the first
+    halo exchange sGDEF∩LUSE = ∅ forever — paper Table 3's 5 MB."""
+    rt = HDArrayRuntime(nproc, materialize=False)
+    n0, n1 = shape
+    interior = Box.make((1, n0 - 1), (1, n1 - 1))
+    part_data = rt.partition_row(shape)
+    part_work = rt.partition_row(shape, region=interior)
+    hA, hB = rt.create("A", shape), rt.create("B", shape)
+    for h in (hA, hB):
+        per = tuple(rt._clip_region_to_array(r, h)
+                    for r in rt.parts[part_data].regions)
+        h.record_write(per)
+    st8 = stencil(2, 1, diagonal=True)
+
+    def body(i):
+        rt.plan_only("conv", part_work, [hA, hB],
+                     uses={"B": st8}, defs={"A": IDENTITY_2D})
+    return run_iterative("Convolution", rt, body, iters)
+
+
+# ----------------------------------------------------------------------
+# Covariance / Correlation (triangular; absolute-section interface)
+# 10240 vectors, 10240^2, 100 iters;  ROW vs manual balanced partition
+# ----------------------------------------------------------------------
+def _triangular(nproc=32, n=10240, iters=100, balanced=False,
+                correlation=False) -> CommReport:
+    """Default (row): even rows + full-gather of the centered data — the
+    triangular access isn't expressible as work-relative offsets, so the
+    naive clause is use(data, ('*','*')).  Custom (balanced): manual
+    work partition balancing the upper-triangular FLOP count (paper
+    Listing 1.1) + use@ ABSOLUTE suffix-column strips, so device p
+    receives only data[:, lo_p:].  Column means use HDArrayReduce (MPI
+    reduce of an (n,) vector — negligible, excluded as in the paper)."""
+    from repro.core.partition import _even_splits
+    rt = HDArrayRuntime(nproc, materialize=False)
+    name = ("Correlation" if correlation else "Covariance") + \
+        ("-balanced" if balanced else "-row")
+    rows = (balanced_triangular_rows(nproc, n) if balanced
+            else _even_splits(n, nproc))
+    regions = [Box.make((lo, hi), (0, n)) for lo, hi in rows]
+    part = rt.partition_manual((n, n), regions)
+    part_row = rt.partition_row((n, n))
+    hD = rt.create("data", (n, n))      # centered data
+    hC = rt.create("cov", (n, n))
+    for h in (hD, hC):
+        per = tuple(rt._clip_region_to_array(r, hD)
+                    for r in rt.parts[part_row].regions)
+        h.record_write(per)
+
+    if balanced:
+        # use@: suffix-column strip per device (cov[i][j], j>=i)
+        use_data = AbsoluteSpec(tuple(
+            SectionSet.of(Box.make((0, n), (rows[p][0], n)))
+            if rows[p][1] > rows[p][0] else SectionSet.empty(2)
+            for p in range(nproc)))
+    else:
+        use_data = ALL_2D_USE
+    # triangular DEF of the upper-tri block (HDArraySetTrapezoidDef)
+    def_cov = AbsoluteSpec(tuple(
+        SectionSet(()) if rows[p][1] <= rows[p][0] else _trap(rows[p], n)
+        for p in range(nproc)))
+
+    def body(i):
+        # center (correlation adds a stddev-normalize pass — local too)
+        rt.plan_only("center", part_row, [hD],
+                     uses={"data": IDENTITY_2D}, defs={"data": IDENTITY_2D})
+        if correlation:
+            rt.plan_only("stddev", part_row, [hD],
+                         uses={"data": IDENTITY_2D},
+                         defs={"data": IDENTITY_2D})
+        rt.plan_only("cov_upper", part, [hD, hC],
+                     uses={"data": use_data}, defs={"cov": def_cov})
+        rt.plan_only("symmetrize", part_row, [hC],
+                     uses={"cov": _SYM_USE(nproc, n)},
+                     defs={"cov": IDENTITY_2D})
+    return run_iterative(name, rt, body, iters)
+
+
+from repro.core import ALL_2D as _ALL2D_CLAUSE  # noqa: E402
+ALL_2D_USE = _ALL2D_CLAUSE
+
+
+def _trap(row_range, n, bands: int = 16) -> SectionSet:
+    """Banded approximation of the upper-tri trapezoid for rows
+    [lo, hi): coarse staircase (16 bands/device) keeps the section
+    algebra cheap at 10240^2 x 32 procs; the over-covered area is
+    < 1/(2·bands) of the block (volume impact < 2%)."""
+    lo, hi = row_range
+    boxes = []
+    step = max(1, (hi - lo) // bands)
+    r = lo
+    while r < hi:
+        r2 = min(r + step, hi)
+        boxes.append(Box.make((r, r2), (r, n)))
+        r = r2
+    return SectionSet.of(*boxes)
+
+
+class _SYM_USE:
+    """Absolute use for symmetrize: device with rows [lo,hi) reads the
+    transposed strip cov[lo:hi columns] from upper-tri owners —
+    approximated as the column strip [0:n, lo:hi) (rectangle)."""
+    _cache: dict = {}
+
+    def __new__(cls, nproc, n):
+        key = (nproc, n)
+        if key not in cls._cache:
+            from repro.core.partition import _even_splits
+            rows = _even_splits(n, nproc)
+            cls._cache[key] = AbsoluteSpec(tuple(
+                SectionSet.of(Box.make((0, lo), (lo, hi)))
+                if lo > 0 else SectionSet.empty(2)
+                for lo, hi in rows))
+        return cls._cache[key]
+
+
+def covariance(nproc=32, n=10240, iters=100, balanced=False) -> CommReport:
+    return _triangular(nproc, n, iters, balanced, correlation=False)
+
+
+def correlation(nproc=32, n=10240, iters=100, balanced=False) -> CommReport:
+    return _triangular(nproc, n, iters, balanced, correlation=True)

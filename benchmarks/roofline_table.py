@@ -1,0 +1,57 @@
+"""§Roofline: render the dry-run sweep (results/dryrun/*.json) as the
+per-(arch x shape x mesh) roofline table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(pattern: str = "*.json"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(DIR, pattern))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r) -> str:
+    if r["status"] == "skip":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                f"| skip: {r['why']} | — | — |")
+    if r["status"] == "error":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERR | | | | "
+                f"{r.get('error', '?')[:60]} | | |")
+    rl = r["roofline"]
+    mem = r.get("memory", {}).get("total_hbm_bytes")
+    mem_s = f"{mem/2**30:.1f}" if mem else "?"
+    return ("| {arch} | {shape} | {mesh} | {tc:.3f} | {tm:.3f} | {tl:.3f} | "
+            "{bn} | {ur:.2f} | {rf:.3f} | {mem} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        tc=rl["t_compute"], tm=rl["t_memory"], tl=rl["t_collective"],
+        bn=rl["bottleneck"], ur=rl["useful_ratio"],
+        rf=rl["roofline_fraction"], mem=mem_s)
+
+
+HEADER = ("| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+          "bottleneck | useful | roofline | GiB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    rows = load()
+    print(HEADER)
+    for r in rows:
+        print(fmt_row(r))
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        print(f"\n# {len(ok)} compiled cells; "
+              f"bottlenecks: " + ", ".join(
+                  f"{b}={sum(1 for r in ok if r['roofline']['bottleneck']==b)}"
+                  for b in ("compute", "memory", "collective")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark entry point: one section per paper table/figure + the
+roofline table from the dry-run sweep.
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run table3     # just the comm-volume table
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    os.makedirs("results", exist_ok=True)
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    t0 = time.time()
+    if which in ("all", "table3"):
+        print("\n===== Paper Table 3 / Fig. 5: communication volume =====")
+        from . import paper_comm_volume
+        paper_comm_volume.main()
+    if which in ("all", "fig4"):
+        print("\n===== Paper Fig. 4: strong scaling (modeled) =====")
+        from . import paper_scaling
+        paper_scaling.main()
+    if which in ("all", "fig6"):
+        print("\n===== Paper Fig. 6/7: runtime overhead =====")
+        from . import paper_overhead
+        paper_overhead.main()
+    if which in ("all", "roofline"):
+        print("\n===== Dry-run roofline table =====")
+        from . import roofline_table
+        roofline_table.main()
+    if which in ("all", "planner_vs_hlo"):
+        print("\n===== Planner-predicted vs HLO collectives =====")
+        from . import planner_vs_hlo
+        planner_vs_hlo.main()
+    print(f"\n# benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

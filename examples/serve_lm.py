@@ -1,0 +1,47 @@
+"""Batched serving example (deliverable (b)): slot-based continuous
+batching over a reduced GQA model — prefill + interleaved decode of
+concurrent requests sharing one compiled decode step.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+
+from repro.launch.serve import load_engine
+
+
+def main():
+    eng = load_engine("deepseek-7b", reduced=True, slots=4, max_seq=128,
+                      temperature=0.0)
+    rng = np.random.default_rng(0)
+    V = eng.cfg.vocab
+
+    # two requests join at different times (continuous batching)
+    s0 = eng.add_request(rng.integers(0, V, 12))
+    for _ in range(8):
+        eng.step()
+    s1 = eng.add_request(rng.integers(0, V, 20))
+    for _ in range(8):
+        eng.step()
+    out0 = eng.finish(s0)
+    out1_partial = len(eng.slot_tokens[s1])
+    for _ in range(4):
+        eng.step()
+    out1 = eng.finish(s1)
+
+    print(f"[serve] slot0 generated {len(out0)-12} tokens: "
+          f"{out0[12:][:10]}...")
+    print(f"[serve] slot1 joined mid-flight, generated "
+          f"{len(out1)-20} tokens: {out1[20:][:10]}...")
+    assert len(out0) == 12 + 1 + 8 + 8      # prompt+prefill tok+16 steps
+    assert len(out1) > out1_partial - 20
+    # determinism: same prompt again -> same greedy continuation
+    s2 = eng.add_request(np.asarray(out0[:12]))
+    for _ in range(16):
+        eng.step()
+    out2 = eng.finish(s2)
+    assert out2[:len(out0)] == out0, "greedy decode must be deterministic"
+    print("[serve] determinism check ✓ (same prompt -> same continuation)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Jacobi stencil with automatic halo exchange + live repartitioning —
+the paper's §5.1 Jacobi benchmark plus its 'repartition at any point'
+contribution (the elasticity primitive).
+
+    PYTHONPATH=src python examples/stencil.py
+"""
+import numpy as np
+
+from repro.core import (Box, HDArrayRuntime, IDENTITY_2D, stencil)
+
+
+def jacobi_kernel(region, bufs):
+    r0, r1 = region.to_slices()[:2]
+    B = bufs["B"]
+    bufs["A"][r0, r1] = (B[r0.start:r0.stop, r1.start - 1:r1.stop - 1]
+                         + B[r0.start:r0.stop, r1.start + 1:r1.stop + 1]
+                         + B[r0.start - 1:r0.stop - 1, r1.start:r1.stop]
+                         + B[r0.start + 1:r0.stop + 1, r1.start:r1.stop]) / 4
+
+
+def copy_kernel(region, bufs):
+    sl = region.to_slices()
+    bufs["B"][sl] = bufs["A"][sl]
+
+
+def serial(B0, iters):
+    B = B0.copy()
+    for _ in range(iters):
+        A = B.copy()
+        A[1:-1, 1:-1] = (B[1:-1, :-2] + B[1:-1, 2:]
+                         + B[:-2, 1:-1] + B[2:, 1:-1]) / 4
+        B = A
+    return B
+
+
+def main():
+    n, iters, nproc = 128, 10, 4
+    rng = np.random.default_rng(0)
+    B0 = rng.normal(size=(n, n)).astype(np.float32)
+
+    rt = HDArrayRuntime(nproc)
+    interior = Box.make((1, n - 1), (1, n - 1))
+    part_data = rt.partition_row((n, n))                 # whole array
+    part_work = rt.partition_row((n, n), region=interior)  # ghost cells out
+    hA, hB = rt.create("A", (n, n)), rt.create("B", (n, n))
+    rt.write(hA, B0, part_data)
+    rt.write(hB, B0, part_data)
+    st4 = stencil(2, 1)   # (0,-1),(0,1),(-1,0),(1,0),(0,0)
+
+    halo_bytes = 0
+    for i in range(iters):
+        if i == iters // 2:
+            # REPARTITION mid-run (paper contribution 3): move to a
+            # different row split; the planner derives the migration.
+            from repro.core.partition import _even_splits
+            splits = _even_splits(n - 2, nproc)[::-1]  # reversed sizes
+            lo = 1
+            regions = []
+            for (a, b) in splits:
+                regions.append(Box.make((lo, lo + (b - a)), (1, n - 1)))
+                lo += b - a
+            part_work = rt.partition_manual((n, n), regions)
+            print(f"iter {i}: repartitioned work (zero kernel-code change)")
+        p1 = rt.apply_kernel("jacobi", part_work, jacobi_kernel, [hA, hB],
+                             uses={"B": st4}, defs={"A": IDENTITY_2D})
+        p2 = rt.apply_kernel("copy", part_work, copy_kernel, [hA, hB],
+                             uses={"A": IDENTITY_2D}, defs={"B": IDENTITY_2D})
+        halo_bytes += p1.bytes_total + p2.bytes_total
+
+    got = rt.read_coherent(hB)
+    want = serial(B0, iters)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    print(f"Jacobi {iters} iters on {nproc} devices: OK "
+          f"(halo traffic {halo_bytes/2**10:.1f} KiB, "
+          f"plans cached {rt.planner.stats.plans_cached}/"
+          f"{rt.planner.stats.plans_cached + rt.planner.stats.plans_computed})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""HDArray core: the paper's contribution in JAX-hosted form.
+
+Public surface:
+  sections  — N-d box/section-set algebra (GDEF/LDEF/LUSE substrate)
+  partition — ROW/COL/BLOCK/manual work partitions
+  offsets   — use/def offset + absolute-section clauses
+  hdarray   — the HDArray handle and its coherence state
+  planner   — Eqns (1)-(4), pattern classification, plan cache
+  comm      — SimExecutor + TPU collective lowering (halo/all-gather)
+  runtime   — HDArrayRuntime facade (paper Table 2)
+"""
+from .sections import Box, SectionSet
+from .partition import Partition, PartitionTable, PartType
+from .offsets import (AccessSpec, AbsoluteSpec, stencil, trapezoid,
+                      balanced_triangular_rows, IDENTITY_1D, IDENTITY_2D,
+                      ROW_ALL, COL_ALL, ALL_2D)
+from .hdarray import HDArray
+from .planner import Planner, CommPlan, CommKind, classify
+from .comm import SimExecutor, lower_plan, halo_exchange, all_gather, CollectiveOp
+from .runtime import HDArrayRuntime
+
+__all__ = [
+    "Box", "SectionSet", "Partition", "PartitionTable", "PartType",
+    "AccessSpec", "AbsoluteSpec", "stencil", "trapezoid",
+    "balanced_triangular_rows", "IDENTITY_1D", "IDENTITY_2D", "ROW_ALL",
+    "COL_ALL", "ALL_2D", "HDArray", "Planner", "CommPlan", "CommKind",
+    "classify", "SimExecutor", "lower_plan", "halo_exchange", "all_gather",
+    "CollectiveOp", "HDArrayRuntime",
+]

@@ -1,0 +1,122 @@
+"""The HDArray handle: global array metadata + coherence state (paper §2.1).
+
+Each HDArray tracks, for every ordered process pair (p, q):
+
+  ``sGDEF[p][q]`` — sections p has WRITTEN but NOT yet SENT to q
+                    (p holds the coherent copy q may later need).
+
+In the paper every process replicates both sGDEF and rGDEF for all
+peers (SPMD).  Under a single controller the two matrices are mirror
+images — ``rGDEF[p][q] == sGDEF[q][p]`` (what p has not received from q
+is exactly what q has written and not sent to p) — so we store one
+matrix and expose the other as a view.  The update equations (3) and
+(4) collapse to a single update of the stored matrix; the planner
+applies them verbatim.
+
+``valid[p]`` tracks which sections device p currently holds an
+up-to-date copy of (for HDArrayRead and reductions).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .sections import Box, SectionSet
+
+
+class HDArray:
+    def __init__(self, name: str, shape: Tuple[int, ...], dtype, nproc: int):
+        self.name = name
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = np.dtype(dtype)
+        self.nproc = nproc
+        nd = len(self.shape)
+        empty = SectionSet.empty(nd)
+        # sgdef[p][q]: written by p, not yet sent to q   (q != p)
+        self.sgdef: list = [[empty for _ in range(nproc)] for _ in range(nproc)]
+        # valid[p]: sections p holds an up-to-date copy of
+        self.valid: list = [empty for _ in range(nproc)]
+        # event log for the planner's history buffers (paper §4.2):
+        # one content-hash per write/commit that touched this array
+        self.events: list = []
+
+    # -- views ---------------------------------------------------------
+    def rgdef(self, p: int, q: int) -> SectionSet:
+        """rGDEF[p][q] — what p has not received from q."""
+        return self.sgdef[q][p]
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def itemsize(self) -> int:
+        return self.dtype.itemsize
+
+    @property
+    def nbytes(self) -> int:
+        n = self.itemsize
+        for s in self.shape:
+            n *= s
+        return n
+
+    # -- state transitions ----------------------------------------------
+    def record_write(self, per_device: Tuple[SectionSet, ...]) -> None:
+        """HDArrayWrite: user data distributed so device p's copy of
+        per_device[p] becomes the coherent one."""
+        for p in range(self.nproc):
+            w = per_device[p]
+            if w.is_empty():
+                continue
+            self.valid[p] = self.valid[p].union(w)
+            for q in range(self.nproc):
+                if q != p:
+                    self.sgdef[p][q] = self.sgdef[p][q].union(w)
+                    # p's write supersedes anything q previously owned there
+                    self.sgdef[q][p] = self.sgdef[q][p].subtract(w)
+                    self.valid[q] = self.valid[q].subtract(w)
+        self.events.append(hash(("write", per_device)))
+
+    def apply_messages_and_defs(
+        self,
+        send: Dict[Tuple[int, int], SectionSet],
+        ldef: Tuple[SectionSet, ...],
+    ) -> None:
+        """Paper Eqns (3)+(4) plus validity bookkeeping, after a kernel.
+
+        ``send[(p, q)]`` is SENDMSG_{p,q}(k); ``ldef[p]`` is LDEF_{p,p}(k).
+        """
+        # (3): sGDEF[p][q] = (sGDEF[p][q] - SENDMSG[p][q]) U LDEF[p]
+        # (4) is the mirrored update of the same stored matrix.
+        for (p, q), msg in send.items():
+            if not msg.is_empty():
+                self.sgdef[p][q] = self.sgdef[p][q].subtract(msg)
+                self.valid[q] = self.valid[q].union(msg)  # q received a copy
+        for p in range(self.nproc):
+            d = ldef[p]
+            if d.is_empty():
+                continue
+            self.valid[p] = self.valid[p].union(d)
+            for q in range(self.nproc):
+                if q != p:
+                    self.sgdef[p][q] = self.sgdef[p][q].union(d)
+                    self.sgdef[q][p] = self.sgdef[q][p].subtract(d)
+                    self.valid[q] = self.valid[q].subtract(d)
+
+    # -- introspection ---------------------------------------------------
+    def owners_of(self, box: Box) -> list:
+        """Devices currently holding an up-to-date copy of `box`."""
+        return [p for p in range(self.nproc)
+                if self.valid[p].intersect(SectionSet.of(box)) == SectionSet.of(box)
+                or self.valid[p].contains_box(box)]
+
+    def coherent_cover(self) -> bool:
+        """True if every element has at least one up-to-date copy."""
+        full = SectionSet.full(self.shape)
+        u = SectionSet.empty(self.ndim)
+        for p in range(self.nproc):
+            u = u.union(self.valid[p])
+        return u == full

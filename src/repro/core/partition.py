@@ -1,0 +1,154 @@
+"""Work-item partitioning (paper §3, `HDArrayPartition` + manual partitions).
+
+A :class:`Partition` assigns each process/device a rectangular *work
+region* of an N-d work-item domain.  Work is decoupled from data: a
+partition says who COMPUTES which output elements; the planner derives
+who must RECEIVE which input elements from the kernel's use/def clauses.
+
+Partitions can be created automatically (ROW / COL / BLOCK, evenly
+split — paper's ``HDArrayPartition``) or manually (explicit regions —
+paper's ``#pragma hdarray partition``).  Repartitioning at any point is
+just creating a new Partition and using its id in the next apply_kernel.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+from .sections import Box, SectionSet
+
+
+class PartType(enum.Enum):
+    ROW = "row"
+    COL = "col"
+    BLOCK = "block"
+    MANUAL = "manual"
+
+
+def _even_splits(extent: int, parts: int) -> Tuple[Tuple[int, int], ...]:
+    """Split [0, extent) into `parts` contiguous chunks, remainder spread
+    over the leading chunks (matches the paper's 'evenly partitions')."""
+    base, rem = divmod(extent, parts)
+    out, lo = [], 0
+    for p in range(parts):
+        hi = lo + base + (1 if p < rem else 0)
+        out.append((lo, hi))
+        lo = hi
+    return tuple(out)
+
+
+@dataclass(frozen=True)
+class Partition:
+    """A work distribution: one Box region per process."""
+
+    part_id: int
+    ptype: PartType
+    domain: Tuple[int, ...]           # global work-item domain shape
+    regions: Tuple[Box, ...]          # one per process, indexed by rank
+
+    @property
+    def nproc(self) -> int:
+        return len(self.regions)
+
+    def region(self, p: int) -> Box:
+        return self.regions[p]
+
+    def region_set(self, p: int) -> SectionSet:
+        b = self.regions[p]
+        return SectionSet.of(b) if not b.is_empty() else SectionSet.empty(len(self.domain))
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def row(part_id: int, domain: Sequence[int], nproc: int,
+            region: Optional[Box] = None) -> "Partition":
+        return Partition._split(part_id, PartType.ROW, domain, nproc, dim=0,
+                                region=region)
+
+    @staticmethod
+    def col(part_id: int, domain: Sequence[int], nproc: int,
+            region: Optional[Box] = None) -> "Partition":
+        return Partition._split(part_id, PartType.COL, domain, nproc, dim=1,
+                                region=region)
+
+    @staticmethod
+    def block(part_id: int, domain: Sequence[int], nproc: int,
+              grid: Optional[Tuple[int, int]] = None,
+              region: Optional[Box] = None) -> "Partition":
+        """2-D block grid over dims (0, 1); `grid` defaults to the most
+        square factorization of nproc."""
+        domain = tuple(int(d) for d in domain)
+        assert len(domain) >= 2, "BLOCK partition needs a >=2-d domain"
+        if grid is None:
+            g0 = int(math.sqrt(nproc))
+            while nproc % g0:
+                g0 -= 1
+            grid = (g0, nproc // g0)
+        assert grid[0] * grid[1] == nproc
+        base = region if region is not None else Box.full(domain)
+        r0 = _even_splits(base.bounds[0][1] - base.bounds[0][0], grid[0])
+        r1 = _even_splits(base.bounds[1][1] - base.bounds[1][0], grid[1])
+        off0, off1 = base.bounds[0][0], base.bounds[1][0]
+        regions = []
+        for p in range(nproc):
+            i, j = divmod(p, grid[1])
+            b = list(base.bounds)
+            b[0] = (off0 + r0[i][0], off0 + r0[i][1])
+            b[1] = (off1 + r1[j][0], off1 + r1[j][1])
+            regions.append(Box(tuple(b)))
+        return Partition(part_id, PartType.BLOCK, domain, tuple(regions))
+
+    @staticmethod
+    def manual(part_id: int, domain: Sequence[int],
+               regions: Sequence[Box]) -> "Partition":
+        """Paper's `#pragma hdarray partition` — explicit per-device regions
+        (may be empty boxes for devices with no work)."""
+        return Partition(part_id, PartType.MANUAL, tuple(int(d) for d in domain),
+                         tuple(regions))
+
+    @staticmethod
+    def _split(part_id: int, ptype: PartType, domain: Sequence[int], nproc: int,
+               dim: int, region: Optional[Box]) -> "Partition":
+        domain = tuple(int(d) for d in domain)
+        base = region if region is not None else Box.full(domain)
+        lo0, hi0 = base.bounds[dim]
+        splits = _even_splits(hi0 - lo0, nproc)
+        regions = []
+        for p in range(nproc):
+            b = list(base.bounds)
+            b[dim] = (lo0 + splits[p][0], lo0 + splits[p][1])
+            regions.append(Box(tuple(b)))
+        return Partition(part_id, ptype, domain, tuple(regions))
+
+
+class PartitionTable:
+    """Allocates unique partition ids (paper: 'returns a unique partition
+    ID ... used throughout the program')."""
+
+    def __init__(self) -> None:
+        self._next = 0
+        self._parts: dict[int, Partition] = {}
+
+    def _register(self, p: Partition) -> int:
+        self._parts[p.part_id] = p
+        return p.part_id
+
+    def new_row(self, domain, nproc, region=None) -> int:
+        pid = self._next; self._next += 1
+        return self._register(Partition.row(pid, domain, nproc, region))
+
+    def new_col(self, domain, nproc, region=None) -> int:
+        pid = self._next; self._next += 1
+        return self._register(Partition.col(pid, domain, nproc, region))
+
+    def new_block(self, domain, nproc, grid=None, region=None) -> int:
+        pid = self._next; self._next += 1
+        return self._register(Partition.block(pid, domain, nproc, grid, region))
+
+    def new_manual(self, domain, regions) -> int:
+        pid = self._next; self._next += 1
+        return self._register(Partition.manual(pid, domain, regions))
+
+    def __getitem__(self, pid: int) -> Partition:
+        return self._parts[pid]

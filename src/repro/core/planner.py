@@ -1,0 +1,275 @@
+"""Communication planner — paper Eqns (1)-(4) + the §4.2 overhead
+optimizations (plan cache, LDEF/LUSE history buffers, linear GDEF
+comparison via canonical sorted sections).
+
+Given a kernel's use/def clauses and a work partition, the planner:
+
+  1. derives LUSE_p / LDEF_p for every device p  (offset or absolute),
+  2. computes SENDMSG/RECVMSG by intersecting GDEF with LUSE (Eqns 1-2),
+  3. classifies the message pattern (all-gather / halo / all-to-all /
+     point-to-point) so the executor can lower it to the best TPU
+     collective,
+  4. commits the GDEF updates (Eqns 3-4).
+
+Plan-reuse machinery (paper §4.2), two steps exactly as described:
+
+  * step 1 — history buffers: each HDArray logs an *event id* (a hash of
+    (kernel, partition, LUSE-id, LDEF-id)) for every write/commit that
+    touched it.  If the event trace since the last plan of this kernel
+    equals the previous period's trace — and that period was once
+    verified to be a GDEF fixpoint — the cached plan is reused with no
+    set algebra at all.
+  * step 2 — linear GDEF comparison: otherwise, compare the arrays'
+    current GDEF matrices against the matrices captured when the plan
+    was computed.  SectionSets are immutable + canonically sorted, so
+    the compare is identity-first then O(n) structural — the paper's
+    'sorted GDEFs allow simple and linear-time GDEF comparisons'.
+
+On a cache hit the plan's intersections are skipped but the Eqn (3)-(4)
+commit still runs (the paper hides that cost by overlapping it with
+communication/compute; we account it separately, mirroring Fig. 7).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from .hdarray import HDArray
+from .offsets import AbsoluteSpec, AccessSpec
+from .partition import Partition
+from .sections import SectionSet
+
+Access = Union[AccessSpec, AbsoluteSpec]
+
+
+class CommKind(enum.Enum):
+    NONE = "none"
+    ALL_GATHER = "all_gather"       # every device needs (nearly) every section
+    HALO = "halo"                   # neighbor-only exchange (stencils)
+    ALL_TO_ALL = "all_to_all"       # balanced permutation
+    P2P = "p2p"                     # irregular point-to-point
+
+
+@dataclass
+class ArrayCommPlan:
+    array: str
+    messages: Dict[Tuple[int, int], SectionSet]  # (src, dst) -> sections
+    kind: CommKind
+    bytes_total: int
+    luse: Tuple[SectionSet, ...]
+    ldef: Tuple[SectionSet, ...]
+
+    @property
+    def n_messages(self) -> int:
+        return sum(1 for m in self.messages.values() if not m.is_empty())
+
+
+@dataclass
+class CommPlan:
+    kernel: str
+    part_id: int
+    arrays: List[ArrayCommPlan]
+    cached: bool = False
+
+    @property
+    def bytes_total(self) -> int:
+        return sum(a.bytes_total for a in self.arrays)
+
+    def messages_for(self, name: str) -> Dict[Tuple[int, int], SectionSet]:
+        for a in self.arrays:
+            if a.array == name:
+                return a.messages
+        return {}
+
+    def plan_for(self, name: str) -> Optional[ArrayCommPlan]:
+        for a in self.arrays:
+            if a.array == name:
+                return a
+        return None
+
+
+@dataclass
+class PlannerStats:
+    """Instrumentation for the overhead study (paper Fig. 6/7)."""
+    plans_computed: int = 0
+    hits_history: int = 0       # §4.2 step-1 reuse
+    hits_state_compare: int = 0  # §4.2 step-2 reuse
+    intersect_ops: int = 0
+    gdef_updates: int = 0
+    state_compares: int = 0
+
+    @property
+    def plans_cached(self) -> int:
+        return self.hits_history + self.hits_state_compare
+
+    def reset(self) -> None:
+        self.plans_computed = self.hits_history = self.hits_state_compare = 0
+        self.intersect_ops = self.gdef_updates = self.state_compares = 0
+
+
+def _access_id(access: Optional[Access]) -> int:
+    return hash(access)
+
+
+def classify(messages: Dict[Tuple[int, int], SectionSet], nproc: int) -> CommKind:
+    """Pattern classification so the executor can pick a TPU collective —
+    the TPU adaptation of the paper's 'detects and schedules
+    point-to-point / all-gather communication' (§5.1)."""
+    live = {pq: m for pq, m in messages.items() if not m.is_empty()}
+    if not live:
+        return CommKind.NONE
+    fanouts: Dict[int, set] = {}
+    for (p, q) in live:
+        fanouts.setdefault(p, set()).add(q)
+    if all(len(v) == nproc - 1 for v in fanouts.values()):
+        per_src = {}
+        uniform = True
+        for (p, _q), m in live.items():
+            if p in per_src and per_src[p] != m:
+                uniform = False
+                break
+            per_src[p] = m
+        if uniform:
+            return CommKind.ALL_GATHER
+        if len(fanouts) == nproc:
+            return CommKind.ALL_TO_ALL
+    if all(abs(p - q) == 1 for (p, q) in live):
+        return CommKind.HALO
+    return CommKind.P2P
+
+
+def _gdef_snapshot(a: HDArray) -> tuple:
+    """Immutable refs to the array's entire sGDEF matrix."""
+    return tuple(tuple(row) for row in a.sgdef)
+
+
+def _snapshots_equal(snap: tuple, a: HDArray, stats: PlannerStats) -> bool:
+    stats.state_compares += 1
+    for p in range(a.nproc):
+        row_s, row_a = snap[p], a.sgdef[p]
+        for q in range(a.nproc):
+            s, c = row_s[q], row_a[q]
+            if s is c:          # identity fast path (immutability)
+                continue
+            if s != c:          # O(n) sorted structural compare
+                return False
+    return True
+
+
+@dataclass
+class _CacheEntry:
+    plan: CommPlan
+    snapshots: Dict[str, tuple]          # array name -> GDEF matrix refs
+    access_sig: tuple                    # (name, luse_id, ldef_id) per array
+    event_marks: Dict[str, int]          # array name -> len(events) at plan time
+    last_period: Optional[Dict[str, tuple]] = None  # trace of previous period
+    fixpoint_verified: bool = False      # one step-2 hit observed => step-1 legal
+
+
+class Planner:
+    def __init__(self) -> None:
+        self.stats = PlannerStats()
+        self._cache: Dict[tuple, _CacheEntry] = {}
+
+    # ------------------------------------------------------------------
+    def _access_sections(
+        self, access: Optional[Access], part: Partition, arr: HDArray, p: int
+    ) -> SectionSet:
+        if access is None:
+            return SectionSet.empty(arr.ndim)
+        if isinstance(access, AbsoluteSpec):
+            return access.sections_for(p)
+        return access.sections(part.region(p), arr.shape)
+
+    def plan(
+        self,
+        kernel: str,
+        part: Partition,
+        arrays: Sequence[HDArray],
+        uses: Dict[str, Access],
+        defs: Dict[str, Access],
+    ) -> CommPlan:
+        """Eqns (1)-(2) with §4.2 two-step reuse."""
+        key = (kernel, part.part_id)
+        access_sig = tuple(
+            (a.name, _access_id(uses.get(a.name)), _access_id(defs.get(a.name)))
+            for a in arrays
+        )
+        entry = self._cache.get(key)
+        if entry is not None and entry.access_sig == access_sig:
+            period = {a.name: tuple(a.events[entry.event_marks[a.name]:])
+                      for a in arrays}
+            # step 1: history-buffer trace compare (only after one
+            # verified fixpoint period)
+            if (entry.fixpoint_verified and entry.last_period is not None
+                    and period == entry.last_period):
+                self.stats.hits_history += 1
+                entry.event_marks = {a.name: len(a.events) for a in arrays}
+                entry.last_period = period
+                entry.plan.cached = True
+                return entry.plan
+            # step 2: linear GDEF state compare
+            if all(_snapshots_equal(entry.snapshots[a.name], a, self.stats)
+                   for a in arrays):
+                self.stats.hits_state_compare += 1
+                entry.fixpoint_verified = True
+                entry.event_marks = {a.name: len(a.events) for a in arrays}
+                entry.last_period = period
+                entry.plan.cached = True
+                return entry.plan
+
+        nproc = part.nproc
+        aplans: List[ArrayCommPlan] = []
+        for a in arrays:
+            use = uses.get(a.name)
+            dfn = defs.get(a.name)
+            luse = tuple(self._access_sections(use, part, a, p) for p in range(nproc))
+            ldef = tuple(self._access_sections(dfn, part, a, p) for p in range(nproc))
+            msgs: Dict[Tuple[int, int], SectionSet] = {}
+            nbytes = 0
+            if use is not None:
+                for p in range(nproc):
+                    for q in range(nproc):
+                        if p == q:
+                            continue
+                        # (1): SENDMSG[p][q] = sGDEF[p][q] n LUSE_q
+                        m = a.sgdef[p][q].intersect(luse[q])
+                        self.stats.intersect_ops += 1
+                        if not m.is_empty():
+                            msgs[(p, q)] = m
+                            nbytes += m.nbytes(a.itemsize)
+            kind = classify(msgs, nproc)
+            aplans.append(ArrayCommPlan(a.name, msgs, kind, nbytes, luse, ldef))
+        plan = CommPlan(kernel, part.part_id, aplans)
+        self.stats.plans_computed += 1
+        self._cache[key] = _CacheEntry(
+            plan=plan,
+            snapshots={a.name: _gdef_snapshot(a) for a in arrays},
+            access_sig=access_sig,
+            event_marks={a.name: len(a.events) for a in arrays},
+        )
+        return plan
+
+    def commit(self, plan: CommPlan, arrays: Sequence[HDArray],
+               part: Partition) -> None:
+        """Eqns (3)-(4).  Runs for cached plans too — the state must keep
+        evolving (the paper instead hides this cost via overlap; we keep
+        the accounting separate, as in its Fig. 7 breakdown)."""
+        byname = {a.name: a for a in arrays}
+        for ap in plan.arrays:
+            a = byname[ap.array]
+            a.apply_messages_and_defs(ap.messages, ap.ldef)
+            a.events.append(hash((plan.kernel, part.part_id, ap.array,
+                                  _access_id_of_plan(ap))))
+            self.stats.gdef_updates += 1
+
+    def plan_and_commit(self, kernel, part, arrays, uses, defs) -> CommPlan:
+        plan = self.plan(kernel, part, arrays, uses, defs)
+        self.commit(plan, arrays, part)
+        return plan
+
+
+def _access_id_of_plan(ap: ArrayCommPlan) -> int:
+    # stable content hash of the luse/ldef shapes this commit applied
+    return hash((ap.array, ap.luse, ap.ldef))

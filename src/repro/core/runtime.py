@@ -1,0 +1,180 @@
+"""HDArrayRuntime — the user-facing facade (paper Table 2 APIs).
+
+Mirrors the paper's library:
+
+  HDArrayInit              -> HDArrayRuntime(nproc)
+  HDArrayCreate            -> rt.create(name, shape, dtype)
+  HDArrayPartition         -> rt.partition_row/col/block/manual(...)
+  HDArrayWrite / Read      -> rt.write / rt.read
+  HDArrayApplyKernel       -> rt.apply_kernel(...)
+  HDArrayReduce            -> rt.reduce(...)
+  HDArraySetAbsoluteUse/Def-> AbsoluteSpec arguments to apply_kernel
+  HDArraySetTrapezoidUse/..-> offsets.trapezoid(...) helper
+  (repartition at any point: just pass a different partition id —
+   paper §1 contribution 3 / §7 future work on elasticity)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+from .comm import SimExecutor, lower_plan
+from .hdarray import HDArray
+from .offsets import AbsoluteSpec, AccessSpec
+from .partition import Box, Partition, PartitionTable
+from .planner import Access, CommPlan, Planner
+from .sections import SectionSet
+
+
+class HDArrayRuntime:
+    def __init__(self, nproc: int, materialize: bool = True):
+        """materialize=False -> NullExecutor: planner-only mode for
+        paper-scale communication studies (no buffers, no copies)."""
+        from .comm import NullExecutor
+        self.nproc = nproc
+        self.parts = PartitionTable()
+        self.planner = Planner()
+        self.executor = SimExecutor() if materialize else NullExecutor()
+        self.arrays: Dict[str, HDArray] = {}
+        self.comm_log: list = []     # [(kernel, CommPlan bytes, kinds)]
+
+    # -- lifecycle ------------------------------------------------------
+    def create(self, name: str, shape, dtype=np.float32) -> HDArray:
+        arr = HDArray(name, tuple(shape), dtype, self.nproc)
+        self.arrays[name] = arr
+        self.executor.allocate(arr)
+        return arr
+
+    def close(self) -> None:
+        for a in self.arrays.values():
+            self.executor.free(a)
+        self.arrays.clear()
+
+    # -- partitions -------------------------------------------------------
+    def partition_row(self, domain, region: Optional[Box] = None) -> int:
+        return self.parts.new_row(domain, self.nproc, region)
+
+    def partition_col(self, domain, region: Optional[Box] = None) -> int:
+        return self.parts.new_col(domain, self.nproc, region)
+
+    def partition_block(self, domain, grid=None, region: Optional[Box] = None) -> int:
+        return self.parts.new_block(domain, self.nproc, grid, region)
+
+    def partition_manual(self, domain, regions: Sequence[Box]) -> int:
+        return self.parts.new_manual(domain, regions)
+
+    # -- I/O ---------------------------------------------------------------
+    def write(self, arr: HDArray, data: np.ndarray, part_id: int) -> None:
+        """Distribute `data` onto devices per the partition (paper
+        HDArrayWrite): device p receives + becomes owner of its region."""
+        part = self.parts[part_id]
+        per_device = tuple(
+            self._clip_region_to_array(part.region(p), arr) for p in range(self.nproc)
+        )
+        self.executor.write(arr, data, per_device)
+        arr.record_write(per_device)
+
+    def write_replicated(self, arr: HDArray, data: np.ndarray) -> None:
+        """Give every device a full coherent copy (no comm ever needed
+        until someone redefines a section)."""
+        full = SectionSet.full(arr.shape)
+        self.executor.write(arr, data, tuple(full for _ in range(self.nproc)))
+        for p in range(self.nproc):
+            arr.valid[p] = full
+        arr.events.append(hash(("write_replicated", arr.name)))
+
+    def read(self, arr: HDArray, part_id: int) -> np.ndarray:
+        part = self.parts[part_id]
+        per_device = tuple(
+            self._clip_region_to_array(part.region(p), arr) for p in range(self.nproc)
+        )
+        return self.executor.read(arr, per_device)
+
+    def read_coherent(self, arr: HDArray) -> np.ndarray:
+        """Assemble the globally coherent view from each device's valid
+        sections (controller-side gather)."""
+        return self.executor.read(arr, tuple(arr.valid))
+
+    # -- the core call -----------------------------------------------------
+    def apply_kernel(
+        self,
+        kernel_name: str,
+        part_id: int,
+        kernel: Optional[Callable],
+        arrays: Sequence[HDArray],
+        uses: Dict[str, Access],
+        defs: Dict[str, Access],
+        **kw,
+    ) -> CommPlan:
+        """Paper Fig. 3: plan comm (Eqns 1-2) -> move data -> run kernel
+        -> commit GDEF updates (Eqns 3-4)."""
+        part = self.parts[part_id]
+        plan = self.planner.plan(kernel_name, part, arrays, uses, defs)
+        for ap in plan.arrays:
+            if ap.messages:
+                self.executor.execute_messages(self.arrays[ap.array], ap.messages)
+        if kernel is not None:
+            self.executor.run_kernel(kernel, part.regions, arrays, **kw)
+        self.planner.commit(plan, arrays, part)
+        self.comm_log.append(
+            (kernel_name, plan.bytes_total,
+             tuple((ap.array, ap.kind.value, ap.bytes_total) for ap in plan.arrays))
+        )
+        return plan
+
+    def plan_only(self, kernel_name, part_id, arrays, uses, defs) -> CommPlan:
+        """Plan + commit WITHOUT executing (metadata-only mode — used for
+        comm-volume studies at paper scale, where running the kernels is
+        unnecessary)."""
+        return self.apply_kernel(kernel_name, part_id, kernel=None,
+                                 arrays=arrays, uses=uses, defs=defs)
+
+    # -- reductions ---------------------------------------------------------
+    def reduce(self, arr: HDArray, op: str, part_id: int):
+        """Paper HDArrayReduce: local (device) reduction then global
+        combine.  Ops: sum/prod/max/min."""
+        part = self.parts[part_id]
+        fns = {"sum": np.sum, "prod": np.prod, "max": np.max, "min": np.min}
+        combine = {"sum": np.add, "prod": np.multiply,
+                   "max": np.maximum, "min": np.minimum}
+        f = fns[op]
+        parts = []
+        for p in range(self.nproc):
+            region = self._clip_region_to_array(part.region(p), arr)
+            buf = self.executor.buffers[arr.name][p]
+            for box in region:
+                parts.append(f(buf[box.to_slices()]))
+        out = parts[0]
+        for v in parts[1:]:
+            out = combine[op](out, v)
+        return out
+
+    # -- repartition (elasticity) --------------------------------------------
+    def repartition(self, arr: HDArray, old_part_id: int, new_part_id: int) -> CommPlan:
+        """Move an array's coherent blocks from one partition to another —
+        the planner derives the migration messages automatically.  This
+        is the paper's 'repartition at any point' and our elasticity
+        primitive (node loss/gain => new partition over fewer/more
+        devices)."""
+        from .offsets import AccessSpec
+        ident = AccessSpec.of(tuple(0 for _ in arr.shape))
+        return self.apply_kernel(
+            f"__repartition_{arr.name}_{old_part_id}->{new_part_id}",
+            new_part_id, kernel=None, arrays=[arr],
+            uses={arr.name: ident}, defs={arr.name: ident},
+        )
+
+    # -- helpers -------------------------------------------------------------
+    def _clip_region_to_array(self, region: Box, arr: HDArray) -> SectionSet:
+        if region.is_empty():
+            return SectionSet.empty(arr.ndim)
+        nd = arr.ndim
+        b = region.bounds[:nd]
+        # pad missing dims with full extent
+        while len(b) < nd:
+            b = b + ((0, arr.shape[len(b)]),)
+        return SectionSet.of(Box(tuple(b)).clamp(arr.shape))
+
+    def lowered_schedule(self, plan: CommPlan, axis: str = "x"):
+        return lower_plan(plan, axis)

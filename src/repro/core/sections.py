@@ -1,0 +1,260 @@
+"""N-dimensional array-section algebra for the HDArray runtime.
+
+The paper (HDArray, §2.1) summarizes GDEF/LDEF/LUSE as sets of array
+sections ``[LB:UB]``.  We represent a *section* as an N-d box with
+half-open per-dimension intervals ``[lo, hi)`` and a *section set* as a
+canonicalized list of pairwise-disjoint boxes kept in sorted order —
+the sorted order is what enables the paper's linear-time GDEF
+comparison (§4.2).
+
+All operations are pure Python over integers: this metadata layer runs
+at plan time (the JAX analogue of the paper's host-side runtime), never
+on device.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Iterable, Sequence, Tuple
+
+Interval = Tuple[int, int]  # half-open [lo, hi)
+
+
+@dataclass(frozen=True, order=True)
+class Box:
+    """An N-d rectangular array section with half-open bounds."""
+
+    bounds: Tuple[Interval, ...]
+
+    # -- construction ------------------------------------------------
+    @staticmethod
+    def make(*bounds: Interval) -> "Box":
+        return Box(tuple((int(lo), int(hi)) for lo, hi in bounds))
+
+    @staticmethod
+    def full(shape: Sequence[int]) -> "Box":
+        return Box(tuple((0, int(s)) for s in shape))
+
+    # -- queries -----------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.bounds)
+
+    def is_empty(self) -> bool:
+        return any(hi <= lo for lo, hi in self.bounds)
+
+    def volume(self) -> int:
+        v = 1
+        for lo, hi in self.bounds:
+            v *= max(0, hi - lo)
+        return v
+
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(max(0, hi - lo) for lo, hi in self.bounds)
+
+    def contains(self, other: "Box") -> bool:
+        return all(
+            slo <= olo and ohi <= shi
+            for (slo, shi), (olo, ohi) in zip(self.bounds, other.bounds)
+        )
+
+    def intersect(self, other: "Box") -> "Box":
+        assert self.ndim == other.ndim, (self, other)
+        return Box(
+            tuple(
+                (max(alo, blo), min(ahi, bhi))
+                for (alo, ahi), (blo, bhi) in zip(self.bounds, other.bounds)
+            )
+        )
+
+    def overlaps(self, other: "Box") -> bool:
+        return not self.intersect(other).is_empty()
+
+    def subtract(self, other: "Box") -> Tuple["Box", ...]:
+        """``self − other`` as ≤ 2·ndim disjoint boxes (standard slab split)."""
+        inter = self.intersect(other)
+        if inter.is_empty():
+            return (self,)
+        out = []
+        lo_rest = list(self.bounds)
+        for d in range(self.ndim):
+            (slo, shi), (ilo, ihi) = lo_rest[d], inter.bounds[d]
+            if slo < ilo:  # slab below the intersection in dim d
+                b = list(lo_rest)
+                b[d] = (slo, ilo)
+                out.append(Box(tuple(b)))
+            if ihi < shi:  # slab above
+                b = list(lo_rest)
+                b[d] = (ihi, shi)
+                out.append(Box(tuple(b)))
+            lo_rest[d] = (ilo, ihi)  # clamp and move to next dim
+        return tuple(b for b in out if not b.is_empty())
+
+    def translate(self, offset: Sequence[int]) -> "Box":
+        assert len(offset) == self.ndim
+        return Box(tuple((lo + o, hi + o) for (lo, hi), o in zip(self.bounds, offset)))
+
+    def clamp(self, shape: Sequence[int]) -> "Box":
+        """Clip to the array domain [0, shape)."""
+        return self.intersect(Box.full(shape))
+
+    def to_slices(self) -> Tuple[slice, ...]:
+        return tuple(slice(lo, hi) for lo, hi in self.bounds)
+
+    def __repr__(self) -> str:  # compact: [0:4,8:16)
+        ins = ",".join(f"{lo}:{hi}" for lo, hi in self.bounds)
+        return f"[{ins})"
+
+
+def _merge_1d(intervals: Iterable[Interval]) -> Tuple[Interval, ...]:
+    ivs = sorted((lo, hi) for lo, hi in intervals if hi > lo)
+    out: list = []
+    for lo, hi in ivs:
+        if out and lo <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return tuple(out)
+
+
+def canonicalize(boxes: Sequence[Box]) -> Tuple[Box, ...]:
+    """Unique canonical disjoint decomposition of a union of boxes.
+
+    Recursive slab decomposition: split along dim 0 at every box
+    boundary, canonicalize the (ndim-1)-d remainder of each slab, then
+    re-merge adjacent slabs with identical remainders.  The result is a
+    *unique* representation of the point set, so SectionSet equality is
+    structural — the property behind the paper's §4.2 'sorted GDEFs
+    allow simple and linear-time GDEF comparisons', and what also merges
+    adjacent/redundant sections (paper §5.2).
+    """
+    boxes = [b for b in boxes if not b.is_empty()]
+    if not boxes:
+        return ()
+    nd = boxes[0].ndim
+    if nd == 1:
+        return tuple(Box((iv,)) for iv in _merge_1d(b.bounds[0] for b in boxes))
+    cuts = sorted({c for b in boxes for c in b.bounds[0]})
+    slabs: list = []  # [(interval0, canonical-rest tuple)]
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        rest = [Box(b.bounds[1:]) for b in boxes
+                if b.bounds[0][0] <= lo and hi <= b.bounds[0][1]]
+        if not rest:
+            continue
+        crest = canonicalize(rest)
+        if slabs and slabs[-1][1] == crest and slabs[-1][0][1] == lo:
+            slabs[-1] = ((slabs[-1][0][0], hi), crest)
+        else:
+            slabs.append(((lo, hi), crest))
+    out: list = []
+    for iv, crest in slabs:
+        for r in crest:
+            out.append(Box((iv,) + r.bounds))
+    return tuple(sorted(out))
+
+
+@dataclass(frozen=True)
+class SectionSet:
+    """A canonical set of pairwise-disjoint boxes, sorted (paper §4.2)."""
+
+    boxes: Tuple[Box, ...]
+
+    # -- construction ------------------------------------------------
+    @staticmethod
+    def empty(ndim: int) -> "SectionSet":
+        del ndim
+        return _EMPTY
+
+    @staticmethod
+    def of(*boxes: Box) -> "SectionSet":
+        return SectionSet(canonicalize(list(boxes)))
+
+    @staticmethod
+    def full(shape: Sequence[int]) -> "SectionSet":
+        return SectionSet.of(Box.full(shape))
+
+    # -- queries -----------------------------------------------------
+    def is_empty(self) -> bool:
+        return not self.boxes
+
+    def volume(self) -> int:
+        return sum(b.volume() for b in self.boxes)
+
+    def nbytes(self, itemsize: int) -> int:
+        return self.volume() * itemsize
+
+    def contains_box(self, box: Box) -> bool:
+        rem = [box]
+        for b in self.boxes:
+            rem = list(itertools.chain.from_iterable(r.subtract(b) for r in rem))
+            if not rem:
+                return True
+        return not rem
+
+    # -- algebra -----------------------------------------------------
+    def union(self, other: "SectionSet") -> "SectionSet":
+        if self.is_empty():
+            return other
+        if other.is_empty():
+            return self
+        return SectionSet(canonicalize(list(self.boxes) + list(other.boxes)))
+
+    def intersect(self, other: "SectionSet") -> "SectionSet":
+        out = []
+        for a in self.boxes:
+            for b in other.boxes:
+                i = a.intersect(b)
+                if not i.is_empty():
+                    out.append(i)
+        return SectionSet(canonicalize(out))
+
+    def subtract(self, other: "SectionSet") -> "SectionSet":
+        rem = list(self.boxes)
+        for b in other.boxes:
+            rem = list(itertools.chain.from_iterable(r.subtract(b) for r in rem))
+        return SectionSet(canonicalize(rem))
+
+    def translate(self, offset: Sequence[int]) -> "SectionSet":
+        return SectionSet(tuple(sorted(b.translate(offset) for b in self.boxes)))
+
+    def clamp(self, shape: Sequence[int]) -> "SectionSet":
+        return SectionSet(canonicalize([b.clamp(shape) for b in self.boxes]))
+
+    # Sorted-order equality is O(n): the canonical form makes == linear,
+    # which is the paper's §4.2 "simple and linear-time GDEF comparison".
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, SectionSet):
+            return NotImplemented
+        return self.boxes == other.boxes
+
+    def __hash__(self) -> int:
+        return hash(self.boxes)
+
+    def __iter__(self):
+        return iter(self.boxes)
+
+    def __repr__(self) -> str:
+        return "{" + ", ".join(map(repr, self.boxes)) + "}"
+
+
+_EMPTY = SectionSet(())
+
+
+def section_set_from_mask(mask) -> SectionSet:
+    """Oracle helper (tests): build a SectionSet from a dense boolean mask."""
+    import numpy as np
+
+    mask = np.asarray(mask, dtype=bool)
+    s = SectionSet(())
+    for idx in np.argwhere(mask):
+        s = s.union(SectionSet.of(Box(tuple((int(i), int(i) + 1) for i in idx))))
+    return s
+
+
+def mask_from_section_set(s: SectionSet, shape) -> "np.ndarray":  # noqa: F821
+    import numpy as np
+
+    m = np.zeros(shape, dtype=bool)
+    for b in s.boxes:
+        m[b.to_slices()] = True
+    return m

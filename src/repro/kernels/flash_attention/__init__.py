@@ -1,0 +1,4 @@
+from .ops import flash_attention
+from .ref import dense_attention
+
+__all__ = ["flash_attention", "dense_attention"]

@@ -1,0 +1,312 @@
+"""Blockwise online-softmax attention in pure jnp (lax.scan) — the
+memory-bounded attention every long-sequence model path lowers through
+on the dry-run (the Pallas kernel in kernel.py is the TPU-native
+version of the SAME algorithm; same block structure, same math).
+
+Memory: O(block_q x block_kv) logits instead of O(T x S) — this is what
+makes the `prefill_32k` cells compile inside a 16 GB HBM budget
+(EXPERIMENTS.md §Dry-run has the before/after).
+
+Two paths:
+  * `blockwise`: outer scan over q blocks, inner scan over kv blocks,
+    online-softmax carry (m, l, acc).  Handles causal + traced window +
+    softcap + ragged per-batch q positions.
+  * `banded`: static integer `window` — each q block attends only the
+    (window + block_q)-wide kv band that can possibly be visible
+    (per-batch dynamic_slice).  O(T·W) compute, the sub-quadratic local
+    attention path (recurrentgemma prefill, long-context cells).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, n, axis, value=0):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _block_mask(qpos_blk, kpos_blk, window):
+    """qpos (B,bq), kpos (bk,) or (B,bk) -> (B,bq,bk) bool."""
+    if kpos_blk.ndim == 1:
+        kpos_blk = kpos_blk[None, :]
+    m = kpos_blk[:, None, :] <= qpos_blk[:, :, None]
+    if window is not None:
+        m &= kpos_blk[:, None, :] > qpos_blk[:, :, None] - window
+    m &= qpos_blk[:, :, None] >= 0
+    m &= kpos_blk[:, None, :] >= 0
+    return m
+
+
+def _attend_block(qg, k, v, mask, softcap, scale, m, l, acc):
+    """One online-softmax update.  qg (B,bq,Hkv,G,Dh); k/v (B,bk,Hkv,*);
+    mask (B,bq,bk); carries m,l (B,Hkv,G,bq), acc (B,bq,Hkv,G,Dv)."""
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    # rows with everything masked: m_new stays NEG_INF; exp(0)=1 garbage —
+    # zero those probabilities explicitly.
+    p = jnp.where(jnp.any(mask[:, None, None], axis=-1, keepdims=True),
+                  p, 0.0)
+    corr = jnp.exp(m - m_new)
+    l = l * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+    return m_new, l, acc
+
+
+def _finish(acc, l):
+    l_t = l.transpose(0, 3, 1, 2)[..., None]
+    return jnp.where(l_t > 0, acc / jnp.maximum(l_t, 1e-30), 0.0)
+
+
+def _blocked(x, n, b, pad_value=0):
+    """(B, T, ...) -> (n, B, b, ...) stacked blocks."""
+    x = _pad_to(x, n * b, 1, value=pad_value)
+    perm = (1, 0, 2) + tuple(range(3, x.ndim + 1))
+    return x.reshape(x.shape[0], n, b, *x.shape[2:]).transpose(perm)
+
+
+def _logits(qg_i, k_j, softcap, scale):
+    """z (f32) and the pre-softcap s·scale (needed for the vjp)."""
+    s = jnp.einsum("btkgd,bskd->bkgts", qg_i, k_j,
+                   preferred_element_type=jnp.float32) * scale
+    z = jnp.tanh(s / softcap) * softcap if softcap else s
+    return z, s
+
+
+def _fwd_blocks(qg, qpb, kb, vb, kposb, window, softcap, scale):
+    """Forward over (q-block outer, kv-block inner) scans.  Returns
+    (o_blocks, lse_blocks) — lse is the per-row log-sum-exp the backward
+    pass needs to rebuild p without storing it."""
+    from repro.models.common import constrain_attention_blocks
+    nq = qg.shape[0]
+    B, bq, Hkv, G, Dh = qg.shape[1:]
+    Dv = vb.shape[-1]
+
+    def q_step(_, xs):
+        qg_i, qp_i = xs
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, bq, Hkv, G, Dv), jnp.float32)
+        # carries must be pinned too — an unconstrained loop state lets
+        # GSPMD replicate the whole online-softmax recurrence
+        m0 = constrain_attention_blocks(m0, 0, (1, 2))
+        l0 = constrain_attention_blocks(l0, 0, (1, 2))
+        a0 = constrain_attention_blocks(a0, 0, (2, 3))
+
+        def kv_step(carry, ys):
+            m, l, acc = carry
+            k_j, v_j, kp_j = ys
+            mask = _block_mask(qp_i, kp_j, window)
+            m, l, acc = _attend_block(qg_i, k_j, v_j, mask, softcap, scale,
+                                      m, l, acc)
+            return (m, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kposb))
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+        return None, (_finish(acc, l), lse)
+
+    _, (ob, lseb) = jax.lax.scan(q_step, None, (qg, qpb))
+    return ob, lseb
+
+
+def _bw_blocks(qg, qpb, kb, vb, kposb, ob, lseb, dob,
+               window, softcap, scale):
+    """Flash backward: recompute p per block pair from lse; never
+    materialize more than one (bq x bk) block of probabilities."""
+    nq, B, bq, Hkv, G, Dh = qg.shape
+    nk = kb.shape[0]
+    Dv = vb.shape[-1]
+    # delta[b,k,g,t] = sum_d do*o  (rows of the softmax jacobian)
+    delta = jnp.einsum("nbtkgd,nbtkgd->nbkgt", dob, ob)
+
+    from repro.models.common import constrain_attention_blocks
+
+    def kv_step(dq_acc, ys):
+        k_j, v_j, kp_j = ys
+        dk0 = jnp.zeros((B, bk_ := k_j.shape[1], Hkv, Dh), jnp.float32)
+        dv0 = jnp.zeros((B, bk_, Hkv, Dv), jnp.float32)
+        dk0 = constrain_attention_blocks(dk0, 0, (2,))
+        dv0 = constrain_attention_blocks(dv0, 0, (2,))
+
+        def q_step(carry, xs):
+            dk_j, dv_j = carry
+            qg_i, qp_i, do_i, lse_i, dl_i = xs
+            mask = _block_mask(qp_i, kp_j, window)
+            z, s = _logits(qg_i, k_j, softcap, scale)
+            p = jnp.exp(z - lse_i[..., None])
+            p = jnp.where(mask[:, None, None], p, 0.0)
+            # dv += p^T do
+            dv_j = dv_j + jnp.einsum("bkgts,btkgd->bskd", p,
+                                     do_i.astype(jnp.float32))
+            dp = jnp.einsum("btkgd,bskd->bkgts", do_i.astype(jnp.float32),
+                            v_j.astype(jnp.float32))
+            dz = p * (dp - dl_i[..., None])
+            if softcap:
+                dz = dz * (1.0 - jnp.square(z / softcap))
+            dz = dz * scale
+            dq_i = jnp.einsum("bkgts,bskd->btkgd", dz,
+                              k_j.astype(jnp.float32))
+            dk_j = dk_j + jnp.einsum("bkgts,btkgd->bskd", dz,
+                                     qg_i.astype(jnp.float32))
+            return (dk_j, dv_j), dq_i
+
+        (dk_j, dv_j), dq_contrib = jax.lax.scan(
+            q_step, (dk0, dv0), (qg, qpb, dob, lseb, delta))
+        return dq_acc + dq_contrib, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((nq, B, bq, Hkv, G, Dh), jnp.float32)
+    dq0 = constrain_attention_blocks(dq0, 1, (3, 4))
+    dq, (dkb, dvb) = jax.lax.scan(kv_step, dq0, (kb, vb, kposb))
+    return dq, dkb, dvb
+
+
+def _blockwise_impl(q, k, v, qpos, window, softcap, scale, block_q, block_kv):
+    from repro.models.common import constrain_attention_blocks
+    B, T, Hq, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    bq, bk = min(block_q, T), min(block_kv, S)
+    nq, nk = -(-T // bq), -(-S // bk)
+    qg = _blocked(q.reshape(B, T, Hkv, G, Dh), nq, bq)
+    qpb = _blocked(qpos, nq, bq, pad_value=-1)
+    kb = _blocked(k, nk, bk)
+    vb = _blocked(v, nk, bk)
+    # pin batch + head sharding through the blocked scan
+    qg = constrain_attention_blocks(qg, 1, (3, 4))
+    kb = constrain_attention_blocks(kb, 1, (3,))
+    vb = constrain_attention_blocks(vb, 1, (3,))
+    kpos = jnp.where(jnp.arange(nk * bk) < S, jnp.arange(nk * bk), -1)
+    kposb = kpos.reshape(nk, bk)
+    return (qg, qpb, kb, vb, kposb), (nq, bq, nk, bk, G)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _blockwise_cvjp(q, k, v, qpos, window, softcap, scale, block_q, block_kv):
+    out, _ = _blockwise_cvjp_fwd(q, k, v, qpos, window, softcap, scale,
+                                 block_q, block_kv)
+    return out
+
+
+def _blockwise_cvjp_fwd(q, k, v, qpos, window, softcap, scale,
+                        block_q, block_kv):
+    (qg, qpb, kb, vb, kposb), dims = _blockwise_impl(
+        q, k, v, qpos, window, softcap, scale, block_q, block_kv)
+    nq, bq, nk, bk, G = dims
+    B, T, Hq, Dh = q.shape
+    Dv = v.shape[-1]
+    ob, lseb = _fwd_blocks(qg, qpb, kb, vb, kposb, window, softcap, scale)
+    o = ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * bq, Hq, Dv)
+    o = o[:, :T].astype(q.dtype)
+    return o, (q, k, v, qpos, window, ob, lseb)
+
+
+def _blockwise_cvjp_bwd(softcap, scale, block_q, block_kv, res, do):
+    q, k, v, qpos, window, ob, lseb = res
+    B, T, Hq, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    (qg, qpb, kb, vb, kposb), dims = _blockwise_impl(
+        q, k, v, qpos, window, softcap, scale, block_q, block_kv)
+    nq, bq, nk, bk, _ = dims
+    dob = _blocked(do.reshape(B, T, Hkv, G, Dv).astype(jnp.float32), nq, bq)
+    dq, dkb, dvb = _bw_blocks(qg, qpb, kb, vb, kposb, ob, lseb, dob,
+                              window, softcap, scale)
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * bq, Hq, Dh)[:, :T]
+    dk = dkb.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk, Hkv, Dh)[:, :S]
+    dv = dvb.transpose(1, 0, 2, 3, 4).reshape(B, nk * bk, Hkv, Dv)[:, :S]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+_blockwise_cvjp.defvjp(_blockwise_cvjp_fwd, _blockwise_cvjp_bwd)
+
+
+def blockwise_attention(q, k, v, *, qpos, window=None, softcap: float = 0.0,
+                        scale: Optional[float] = None,
+                        block_q: int = 512, block_kv: int = 1024):
+    """q (B,T,Hq,Dh); k (B,S,Hkv,Dh); v (B,S,Hkv,Dv); qpos (B,T).
+    `window`: None (causal) or int/traced scalar (sliding window).
+    Returns (B,T,Hq,Dv) in q.dtype.
+
+    Differentiable via a flash-style custom VJP: the backward pass
+    recomputes each (bq x bk) probability block from the saved per-row
+    logsumexp instead of letting autodiff store every block — without
+    this, training at 4k+ context stores O(T·S) residuals per layer
+    (EXPERIMENTS.md §Perf quantifies the delta)."""
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    w = window if window is not None else jnp.asarray(1 << 30, jnp.int32)
+    return _blockwise_cvjp(q, k, v, qpos.astype(jnp.int32), w,
+                           float(softcap), float(scale),
+                           int(block_q), int(block_kv))
+
+
+def banded_attention(q, k, v, *, qpos, window: int, softcap: float = 0.0,
+                     scale: Optional[float] = None, block_q: int = 512):
+    """Static sliding-window attention: each q block sees only its
+    (window + block_q) kv band.  O(T·window) compute and memory.
+
+    Requires contiguous per-batch positions: qpos[b] = off[b] + arange(T)
+    and kv laid out so kv index s has position s (the prefill layout)."""
+    from repro.models.common import constrain_attention_blocks
+    B, T, Hq, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    bq = min(block_q, T)
+    nq = -(-T // bq)
+    L = min(S, window + bq)                  # static band length
+
+    qp = _pad_to(q, nq * bq, 1)
+    qpp = _pad_to(qpos, nq * bq, 1, value=-1)
+    qg = qp.reshape(B, nq, bq, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    qg = constrain_attention_blocks(qg, 1, (3, 4))
+    k = constrain_attention_blocks(k, 0, (2,))
+    v = constrain_attention_blocks(v, 0, (2,))
+    qpb = qpp.reshape(B, nq, bq).transpose(1, 0, 2)
+
+    def q_step(_, xs):
+        qg_i, qp_i = xs                      # (B,bq,...), (B,bq)
+        # band start: highest kv index visible is max qpos in block; lowest
+        # is (min qpos) - window + 1.  Clamp into [0, S-L].
+        lo = jnp.max(qp_i, axis=1) - (L - 1)         # (B,)
+        start = jnp.clip(lo, 0, S - L)
+
+        def slice_b(kb_, vb_, st):
+            ks = jax.lax.dynamic_slice_in_dim(kb_, st, L, axis=0)
+            vs = jax.lax.dynamic_slice_in_dim(vb_, st, L, axis=0)
+            return ks, vs
+        ks, vs = jax.vmap(slice_b)(k, v, start)      # (B,L,Hkv,*)
+        kpos_b = start[:, None] + jnp.arange(L)[None, :]
+        kpos_b = jnp.where(kpos_b < S, kpos_b, -1)
+        mask = _block_mask(qp_i, kpos_b, window)
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, bq, Hkv, G, Dv), jnp.float32)
+        m, l, acc = _attend_block(qg_i, ks, vs, mask, softcap, scale,
+                                  m0, l0, a0)
+        return None, _finish(acc, l)
+
+    _, ob = jax.lax.scan(q_step, None, (qg, qpb))
+    o = ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * bq, Hq, Dv)
+    return o[:, :T].astype(q.dtype)

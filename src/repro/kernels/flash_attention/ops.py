@@ -1,0 +1,68 @@
+"""Public flash-attention entry point with implementation dispatch.
+
+  impl='dense'     — ref.py oracle (small shapes, tests)
+  impl='blockwise' — jnp lax.scan online softmax (any backend; what the
+                     dry-run lowers — memory O(bq x bk))
+  impl='banded'    — static-window band gather, O(T·window)
+  impl='pallas'    — the TPU kernel (interpret=True on CPU for tests)
+  impl='auto'      — banded if static int window given, dense for small
+                     T·S, blockwise otherwise; pallas on TPU backends.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import jnp_impl, ref
+from .kernel import flash_attention_pallas
+
+_DENSE_MAX = 2048 * 2048      # T*S elements below which dense is fine
+
+
+def _is_static_int(x) -> bool:
+    return isinstance(x, int) or (hasattr(x, "dtype") and not
+                                  isinstance(x, jax.core.Tracer)
+                                  and getattr(x, "ndim", 1) == 0)
+
+
+def flash_attention(q, k, v, *, qpos, window=None, softcap: float = 0.0,
+                    scale: Optional[float] = None, impl: str = "auto",
+                    block_q: int = 512, block_kv: int = 1024,
+                    interpret: bool = True):
+    """Causal/windowed GQA attention.  q (B,T,Hq,Dh); k (B,S,Hkv,Dh);
+    v (B,S,Hkv,Dv); qpos (B,T) absolute query positions (kv position of
+    slot s is s).  Returns (B,T,Hq,Dv)."""
+    B, T = q.shape[:2]
+    S = k.shape[1]
+    if impl == "auto":
+        static_w = _is_static_int(window)
+        if static_w and window is not None and int(window) * 4 < S:
+            impl = "banded"
+        elif T * S <= _DENSE_MAX:
+            impl = "dense"
+        elif jax.default_backend() == "tpu" and static_w:
+            impl = "pallas"
+        else:
+            impl = "blockwise"
+    if impl == "dense":
+        return ref.dense_attention(q, k, v, qpos=qpos, window=window,
+                                   softcap=softcap, scale=scale)
+    if impl == "blockwise":
+        return jnp_impl.blockwise_attention(
+            q, k, v, qpos=qpos, window=window, softcap=softcap, scale=scale,
+            block_q=block_q, block_kv=block_kv)
+    if impl == "banded":
+        return jnp_impl.banded_attention(
+            q, k, v, qpos=qpos, window=int(window), softcap=softcap,
+            scale=scale, block_q=block_q)
+    if impl == "pallas":
+        w = int(window) if window is not None else None
+        return flash_attention_pallas(
+            q, k, v, qpos=qpos, window=w, softcap=softcap, scale=scale,
+            block_q=min(block_q, 128 if interpret else block_q),
+            block_kv=min(block_kv, 128 if interpret else block_kv),
+            interpret=interpret and jax.default_backend() != "tpu")
+    raise ValueError(impl)

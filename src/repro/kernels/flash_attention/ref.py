@@ -1,0 +1,47 @@
+"""Pure-jnp dense oracle for blockwise/Pallas attention.
+
+Materializes the full (B, Hkv, G, T, S) logit tensor — O(T·S) memory,
+only usable at small scale; it defines the semantics every other impl
+must reproduce (tests assert allclose against this).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask(qpos, kpos, window):
+    """qpos (B,T) int32, kpos (S,) -> (B,T,S) bool.  window None => causal;
+    else causal AND kpos > qpos - window (window may be traced)."""
+    m = kpos[None, None, :] <= qpos[:, :, None]
+    if window is not None:
+        m &= kpos[None, None, :] > qpos[:, :, None] - window
+    m &= qpos[:, :, None] >= 0          # padded/query-invalid rows
+    return m
+
+
+def dense_attention(q, k, v, *, qpos, window=None, softcap: float = 0.0,
+                    scale: Optional[float] = None):
+    """q (B,T,Hq,Dh); k (B,S,Hkv,Dh); v (B,S,Hkv,Dv); qpos (B,T) absolute
+    query positions (kv positions are arange(S)).  Returns (B,T,Hq,Dv)."""
+    B, T, Hq, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, T, Hkv, G, Dh)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    m = _mask(qpos, jnp.arange(S), window)          # (B,T,S)
+    s = jnp.where(m[:, None, None], s, -jnp.inf)
+    # fully-masked rows -> zero output (matches blockwise l==0 guard)
+    row_any = jnp.any(m, axis=-1)                   # (B,T)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(row_any[:, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bkgts,bskd->btkgd", p.astype(q.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, T, Hq, v.shape[-1]).astype(q.dtype)

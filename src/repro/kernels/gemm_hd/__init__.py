@@ -1,0 +1,3 @@
+from .ops import gemm
+
+__all__ = ["gemm"]

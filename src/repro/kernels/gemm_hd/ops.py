@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the blocked GEMM kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import gemm_pallas
+from .ref import gemm_ref
+
+
+@partial(jax.jit, static_argnames=("alpha", "impl", "interpret"))
+def gemm(a, b, *, alpha: float = 1.0, impl: str = "auto",
+         interpret: bool = True):
+    """Blocked GEMM; Pallas on TPU, interpret-mode Pallas or the jnp
+    oracle elsewhere."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return gemm_pallas(a, b, alpha=alpha,
+                           interpret=interpret and
+                           jax.default_backend() != "tpu")
+    return gemm_ref(a, b, alpha=alpha)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the blocked GEMM kernel."""
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, *, alpha: float = 1.0, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    return (alpha * jnp.dot(a, b, preferred_element_type=jnp.float32)) \
+        .astype(out_dtype)

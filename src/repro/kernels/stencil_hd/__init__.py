@@ -1,0 +1,3 @@
+from .ops import jacobi_step
+
+__all__ = ["jacobi_step"]

@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the Jacobi stencil kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import jacobi_pallas
+from .ref import jacobi_ref
+
+
+@partial(jax.jit, static_argnames=("impl", "interpret"))
+def jacobi_step(x, *, impl: str = "auto", interpret: bool = True):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return jacobi_pallas(x, interpret=interpret and
+                             jax.default_backend() != "tpu")
+    return jacobi_ref(x)

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant, so importing this module never
+touches jax device state (device count is locked at first jax init —
+dryrun.py sets XLA_FLAGS before any import for that reason).
+
+Mesh layout (TPU v5e pods, 256 chips each):
+  single-pod : (16, 16)      axes ("data", "model")
+  multi-pod  : (2, 16, 16)   axes ("pod", "data", "model")
+
+Axis roles under the baseline HDArray rules (train/sharding.py):
+  pod    — pure data parallel across pods (grad all-reduce crosses DCI)
+  data   — data parallel + FSDP param sharding (ZeRO within a pod)
+  model  — tensor parallel (heads/ffn/vocab) + expert parallel (MoE) +
+           sequence parallel for long-context decode
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "run via launch/dryrun.py, which forces "
+            "--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices exist (tests)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

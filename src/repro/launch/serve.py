@@ -1,0 +1,74 @@
+"""Serving driver: batched prefill/decode with the slot Engine.
+
+On the production mesh the SAME prefill/decode functions lower with the
+shardings of launch/dryrun.py (the decode_* cells); here they run for
+real on local devices with a reduced config — examples/serve_lm.py uses
+this.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serve import Engine, ServeConfig
+
+
+def load_engine(arch: str, *, reduced: bool = True, slots: int = 4,
+                max_seq: int = 256, temperature: float = 0.0,
+                seed: int = 0) -> Engine:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    bundle = build(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(seed))
+    return Engine(bundle, params,
+                  ServeConfig(max_seq=max_seq, slots=slots,
+                              temperature=temperature), seed=seed)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    eng = load_engine(args.arch, reduced=not args.full, slots=args.slots,
+                      max_seq=args.max_seq, temperature=args.temperature)
+    rng = np.random.default_rng(0)
+    cfg = eng.cfg
+    extra = {}
+    if cfg.encdec is not None:
+        extra["frames"] = np.asarray(
+            rng.standard_normal((args.slots, cfg.encdec.n_frames,
+                                 cfg.d_model)), np.float32)
+    if cfg.vision is not None:
+        extra["image_embeds"] = np.asarray(
+            rng.standard_normal((args.slots, cfg.vision.n_image_tokens,
+                                 cfg.vision.d_vision)), np.float32)
+
+    t0 = time.time()
+    n_tok = 0
+    for r in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, args.prompt_len)
+        out = eng.generate(prompt, args.tokens, extra_inputs=extra or None)
+        n_tok += args.tokens
+        print(f"[serve] req {r}: prompt {args.prompt_len} -> "
+              f"{out[args.prompt_len:][:16]} ...")
+    dt = time.time() - t0
+    print(f"[serve] {args.requests} requests, {n_tok} tokens "
+          f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: the 10 assigned architectures, assembled in lm.build()."""
+from .lm import ModelBundle, build
+
+__all__ = ["ModelBundle", "build"]

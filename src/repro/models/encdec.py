@@ -1,0 +1,174 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings (B, n_frames, d_model).  Encoder = bidirectional
+self-attention stack with sinusoidal positions; decoder = causal self
+attention + cross attention to the encoder output.  Train: teacher
+forcing over decoder tokens.  Prefill computes + caches the encoder
+output's cross-K/V; decode reuses them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as LY
+from .common import gqa_attention, make_causal_mask, rms_norm
+from .lm import ModelBundle, _embed, _embed_params, _head
+
+
+def _sinusoid(T, D, dtype):
+    pos = jnp.arange(T)[:, None].astype(jnp.float32)
+    i = jnp.arange(D // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / D)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+    return pe.astype(dtype)
+
+
+def _plain_mlp_params(key, d_model, d_ff, n_layers):
+    ks = jax.random.split(key, 2)
+    p = {"w1": jax.random.normal(ks[0], (n_layers, d_model, d_ff), jnp.float32) / math.sqrt(d_model),
+         "w2": jax.random.normal(ks[1], (n_layers, d_ff, d_model), jnp.float32) / math.sqrt(d_ff)}
+    s = {"w1": ("layers", "embed", "mlp"), "w2": ("layers", "mlp", "embed")}
+    return p, s
+
+
+def build_whisper(cfg, dt):
+    E = cfg.encdec
+    n_enc, n_dec = E.n_enc_layers, cfg.n_layers
+
+    def init(key):
+        ks = jax.random.split(key, 8)
+        emb_p, emb_s = _embed_params(ks[0], cfg)
+        enc_a, enc_as = LY.attn_params(ks[1], cfg, n_enc)
+        enc_m, enc_ms = _plain_mlp_params(ks[2], cfg.d_model, cfg.d_ff, n_enc)
+        enc_n, enc_ns = LY.norms_params(n_enc, cfg.d_model, ["pre_attn", "pre_mlp"])
+        dec_a, dec_as = LY.attn_params(ks[3], cfg, n_dec)
+        dec_x, dec_xs = LY.cross_attn_params(ks[4], cfg, n_dec, cfg.d_model)
+        dec_m, dec_ms = _plain_mlp_params(ks[5], cfg.d_model, cfg.d_ff, n_dec)
+        dec_n, dec_ns = LY.norms_params(n_dec, cfg.d_model,
+                                        ["pre_attn", "pre_cross", "pre_mlp"])
+        enc_fn = jnp.zeros((cfg.d_model,), jnp.float32)
+        p = {"emb": emb_p,
+             "enc": {"attn": enc_a, "mlp": enc_m, "norms": enc_n,
+                     "final_norm": enc_fn},
+             "dec": {"attn": dec_a, "cross": dec_x, "mlp": dec_m,
+                     "norms": dec_n}}
+        s = {"emb": emb_s,
+             "enc": {"attn": enc_as, "mlp": enc_ms, "norms": enc_ns,
+                     "final_norm": ("embed",)},
+             "dec": {"attn": dec_as, "cross": dec_xs, "mlp": dec_ms,
+                     "norms": dec_ns}}
+        return p, s
+
+    # -- encoder ---------------------------------------------------------
+    def encode(params, frames, remat=False):
+        x = frames.astype(dt) + _sinusoid(frames.shape[1], cfg.d_model, dt)[None]
+        pe = params["enc"]
+
+        def body(xv, pl):
+            h = rms_norm(xv, pl["norms"]["pre_attn"])
+            B, T, D = h.shape
+            Hq, Dh = cfg.n_heads, cfg.head_dim
+            q = (h @ pl["attn"]["wq"].astype(dt)).reshape(B, T, Hq, Dh)
+            k = (h @ pl["attn"]["wk"].astype(dt)).reshape(B, T, Hq, Dh)
+            v = (h @ pl["attn"]["wv"].astype(dt)).reshape(B, T, Hq, Dh)
+            o = gqa_attention(q, k, v, jnp.ones((T, T), bool))
+            xv = xv + o.reshape(B, T, Hq * Dh) @ pl["attn"]["wo"].astype(dt)
+            h = rms_norm(xv, pl["norms"]["pre_mlp"])
+            xv = xv + jax.nn.gelu(h @ pl["mlp"]["w1"].astype(dt)) @ pl["mlp"]["w2"].astype(dt)
+            return xv, None
+
+        fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+        x, _ = jax.lax.scan(fn, x, {"attn": pe["attn"], "mlp": pe["mlp"],
+                                    "norms": pe["norms"]})
+        return rms_norm(x, pe["final_norm"])
+
+    def _cross_kv(params, enc_out):
+        """Per-decoder-layer cross K/V from the encoder output."""
+        B, S, D = enc_out.shape
+        Hq, Dh = cfg.n_heads, cfg.head_dim
+        wk = params["dec"]["cross"]["wk"].astype(dt)   # (L, D, HqDh)
+        wv = params["dec"]["cross"]["wv"].astype(dt)
+        k = jnp.einsum("bsd,ldh->lbsh", enc_out, wk).reshape(n_dec, B, S, Hq, Dh)
+        v = jnp.einsum("bsd,ldh->lbsh", enc_out, wv).reshape(n_dec, B, S, Hq, Dh)
+        return k, v
+
+    # -- decoder ---------------------------------------------------------
+    def _run_dec(params, x, cross_k, cross_v, cache, pos, remat=False):
+        pd = params["dec"]
+        stacked = {"attn": pd["attn"],
+                   "cross": {"wq": pd["cross"]["wq"], "wo": pd["cross"]["wo"]},
+                   "mlp": pd["mlp"], "norms": pd["norms"]}
+        csl = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+
+        def body(xv, xs):
+            pl, ck, cv, c = xs
+            h = rms_norm(xv, pl["norms"]["pre_attn"])
+            cc = None if c is None else dict(c, pos=pos)
+            o, nc = LY.attention(pl["attn"], h, cfg=cfg, window=None, cache=cc,
+                                 rope_base=cfg.rope_base)
+            if nc is not None:
+                nc.pop("pos")
+            xv = xv + o
+            # cross attention
+            h = rms_norm(xv, pl["norms"]["pre_cross"])
+            B, T, D = h.shape
+            Hq, Dh = cfg.n_heads, cfg.head_dim
+            q = (h @ pl["cross"]["wq"].astype(dt)).reshape(B, T, Hq, Dh)
+            o = gqa_attention(q, ck.astype(dt), cv.astype(dt),
+                              jnp.ones((T, ck.shape[1]), bool))
+            xv = xv + o.reshape(B, T, Hq * Dh) @ pl["cross"]["wo"].astype(dt)
+            h = rms_norm(xv, pl["norms"]["pre_mlp"])
+            xv = xv + jax.nn.gelu(h @ pl["mlp"]["w1"].astype(dt)) @ pl["mlp"]["w2"].astype(dt)
+            return xv, nc
+
+        fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+        x, new_c = jax.lax.scan(fn, x, (stacked, cross_k, cross_v, csl))
+        return x, new_c
+
+    # -- public fns -------------------------------------------------------
+    def forward(params, batch):
+        enc_out = encode(params, batch["frames"], remat=True)
+        ck, cv = _cross_kv(params, enc_out)
+        x = _embed(params["emb"], batch["tokens"], cfg, dt)
+        x = x + _sinusoid(x.shape[1], cfg.d_model, dt)[None]
+        x, _ = _run_dec(params, x, ck, cv, None, None, remat=True)
+        return _head(params["emb"], x, cfg), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+    def init_cache(B, T_max):
+        full = LY.init_full_cache(cfg, n_dec, B, T_max)
+        Hq, Dh = cfg.n_heads, cfg.head_dim
+        return {
+            **full,
+            "cross_k": jnp.zeros((n_dec, B, E.n_frames, Hq, Dh), jnp.bfloat16),
+            "cross_v": jnp.zeros((n_dec, B, E.n_frames, Hq, Dh), jnp.bfloat16),
+            "pos": jnp.zeros((B,), jnp.int32),
+        }
+
+    def prefill(params, batch, cache):
+        enc_out = encode(params, batch["frames"])
+        ck, cv = _cross_kv(params, enc_out)
+        x = _embed(params["emb"], batch["tokens"], cfg, dt)
+        x = x + _sinusoid(x.shape[1], cfg.d_model, dt)[None]
+        pos = cache["pos"]
+        x, nc = _run_dec(params, x, ck, cv, cache, pos)
+        cache = {**nc, "cross_k": ck.astype(jnp.bfloat16),
+                 "cross_v": cv.astype(jnp.bfloat16), "pos": pos + x.shape[1]}
+        return _head(params["emb"], x[:, -1:, :], cfg), cache
+
+    def decode(params, batch, cache):
+        x = _embed(params["emb"], batch["token"], cfg, dt)
+        pos = batch["pos"]
+        pe = _sinusoid(1 << 16, cfg.d_model, dt)
+        x = x + pe[pos][:, None, :]
+        x, nc = _run_dec(params, x, cache["cross_k"], cache["cross_v"],
+                         cache, pos)
+        cache = {**nc, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+                 "pos": pos + 1}
+        return _head(params["emb"], x, cfg), cache
+
+    return ModelBundle(cfg, init, forward, prefill, decode, init_cache)

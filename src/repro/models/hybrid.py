@@ -1,0 +1,250 @@
+"""RecurrentGemma (hybrid RG-LRU + local attention) and xLSTM LM
+assemblies.  Both are the sub-quadratic archs that run the `long_500k`
+cell: decode state is O(width), attention (if any) is ring-buffered.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as LY
+from . import rglru as RG
+from . import xlstm as XL
+from .common import gated_mlp, rms_norm
+from .lm import ModelBundle, _embed, _embed_params, _head
+
+
+# ======================================================================
+# recurrentgemma: super-blocks of (rec, rec, attn), tail (rec, rec)
+# ======================================================================
+def build_recurrentgemma(cfg, dt):
+    pat = cfg.rg.pattern                       # 2 rec per attn
+    n_sb = cfg.n_layers // (pat + 1)           # full (rec,rec,attn) blocks
+    n_tail = cfg.n_layers - n_sb * (pat + 1)   # trailing rec blocks
+    n_rec = n_sb * pat + n_tail
+    n_attn = n_sb
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+        emb_p, emb_s = _embed_params(ks[0], cfg)
+        rec_p, rec_s = RG.rglru_params(ks[1], cfg, n_rec)
+        att_p, att_s = LY.attn_params(ks[2], cfg, n_attn)
+        mlp_p, mlp_s = LY.mlp_params(ks[3], cfg.d_model, cfg.d_ff, cfg.n_layers)
+        nm_p, nm_s = LY.norms_params(cfg.n_layers, cfg.d_model,
+                                     ["pre_mix", "pre_mlp"])
+        p = {"emb": emb_p, "rec": rec_p, "attn": att_p, "mlp": mlp_p,
+             "norms": nm_p}
+        s = {"emb": emb_s, "rec": rec_s, "attn": att_s, "mlp": mlp_s,
+             "norms": nm_s}
+        return p, s
+
+    def _mlp_at(params, j, x):
+        pl = jax.tree.map(lambda a: a[j], params["mlp"])
+        nm = jax.tree.map(lambda a: a[j], params["norms"])
+        h = rms_norm(x, nm["pre_mlp"])
+        return x + gated_mlp(h, pl["w_gate"].astype(dt), pl["w_up"].astype(dt),
+                             pl["w_down"].astype(dt), act=cfg.act)
+
+    def _rec_at(params, r, j, x, cache):
+        """recurrent block r (global layer j).  cache: {'h','conv','pos'}
+        slices for this block or None."""
+        pl = jax.tree.map(lambda a: a[r], params["rec"])
+        nm = jax.tree.map(lambda a: a[j], params["norms"])
+        h = rms_norm(x, nm["pre_mix"])
+        csl = None
+        if cache is not None:
+            csl = {"h": cache["rec_h"][r], "conv": cache["rec_conv"][r]}
+        o, new_c = RG.rglru_block(pl, h, cfg, cache=csl)
+        x = x + o
+        x = _mlp_at(params, j, x)
+        return x, new_c
+
+    def _attn_at(params, a, j, x, cache, pos):
+        pl = jax.tree.map(lambda v: v[a], params["attn"])
+        nm = jax.tree.map(lambda v: v[j], params["norms"])
+        h = rms_norm(x, nm["pre_mix"])
+        csl = None
+        if cache is not None:
+            csl = {"k": cache["att_k"][a], "v": cache["att_v"][a],
+                   "kpos": cache["att_kpos"][a], "pos": pos}
+        o, new_c = LY.attention(pl, h, cfg=cfg, window=cfg.window, cache=csl,
+                                rope_base=cfg.rope_base)
+        x = x + o
+        x = _mlp_at(params, j, x)
+        return x, new_c
+
+    def _run(params, x, cache, pos, remat=False):
+        """Unrolled over 26 layers (stacks are small; scan would need
+        ragged group interleaving).  Returns (x, new_cache).  `remat`
+        checkpoints per layer (training path — backward recomputes one
+        layer at a time instead of saving every intermediate)."""
+        new_rec, new_att = [], []
+        r = a = 0
+        for j in range(cfg.n_layers):
+            if j % (pat + 1) < pat or j >= n_sb * (pat + 1):
+                fn = (lambda p, xv, r=r, j=j: _rec_at(p, r, j, xv, cache))
+                if remat and cache is None:
+                    fn = jax.checkpoint(fn, prevent_cse=False)
+                x, nc = fn(params, x)
+                if nc is not None:
+                    new_rec.append(nc)
+                r += 1
+            else:
+                fn = (lambda p, xv, a=a, j=j: _attn_at(p, a, j, xv, cache, pos))
+                if remat and cache is None:
+                    fn = jax.checkpoint(fn, prevent_cse=False)
+                x, nc = fn(params, x)
+                if nc is not None:
+                    new_att.append(nc)
+                a += 1
+        new_cache = None
+        if cache is not None:
+            T = x.shape[1]
+            new_cache = {
+                "rec_h": jnp.stack([c["h"] for c in new_rec]),
+                "rec_conv": jnp.stack([c["conv"] for c in new_rec]),
+                "att_k": jnp.stack([c["k"] for c in new_att]),
+                "att_v": jnp.stack([c["v"] for c in new_att]),
+                "att_kpos": jnp.stack([c["kpos"] for c in new_att]),
+            }
+        return x, new_cache
+
+    def forward(params, batch):
+        x = _embed(params["emb"], batch["tokens"], cfg, dt)
+        x, _ = _run(params, x, None, None, remat=True)
+        return _head(params["emb"], x, cfg), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+    def forward_fused(params, batch):
+        from .common import fused_cross_entropy
+        x = _embed(params["emb"], batch["tokens"], cfg, dt)
+        x, _ = _run(params, x, None, None, remat=True)
+        emb = params["emb"]
+        loss = fused_cross_entropy(x, emb["final_norm"], emb["out_emb"],
+                                   batch["labels"], batch.get("mask"),
+                                   cfg.final_softcap)
+        return loss, {"ce": loss}
+
+    def init_cache(B, T_max):
+        del T_max  # state is O(width) + ring window — sub-quadratic
+        rc = RG.init_rglru_cache(cfg, n_rec, B)
+        ring = LY.init_ring_cache(cfg, n_attn, B)
+        return {"rec_h": rc["h"], "rec_conv": rc["conv"],
+                "att_k": ring["k"], "att_v": ring["v"],
+                "att_kpos": ring["kpos"],
+                "pos": jnp.zeros((B,), jnp.int32)}
+
+    def prefill(params, batch, cache):
+        x = _embed(params["emb"], batch["tokens"], cfg, dt)
+        pos = cache["pos"]
+        x, nc = _run(params, x, cache, pos)
+        nc["pos"] = pos + x.shape[1]
+        return _head(params["emb"], x[:, -1:, :], cfg), nc
+
+    def decode(params, batch, cache):
+        x = _embed(params["emb"], batch["token"], cfg, dt)
+        pos = batch["pos"]
+        x, nc = _run(params, x, cache, pos)
+        nc["pos"] = pos + 1
+        return _head(params["emb"], x, cfg), nc
+
+    return ModelBundle(cfg, init, forward, prefill, decode, init_cache,
+                       forward_fused)
+
+
+# ======================================================================
+# xLSTM LM: (slstm_every-1 mLSTM, 1 sLSTM) repeating
+# ======================================================================
+def build_xlstm_lm(cfg, dt):
+    ev = cfg.xlstm.slstm_every
+    n_s = cfg.n_layers // ev
+    n_m = cfg.n_layers - n_s
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        emb_p, emb_s = _embed_params(ks[0], cfg)
+        m_p, m_s = XL.mlstm_params(ks[1], cfg, n_m)
+        s_p, s_s = XL.slstm_params(ks[2], cfg, max(n_s, 1))
+        nm_p, nm_s = LY.norms_params(cfg.n_layers, cfg.d_model, ["pre"])
+        p = {"emb": emb_p, "mlstm": m_p, "slstm": s_p, "norms": nm_p}
+        s = {"emb": emb_s, "mlstm": m_s, "slstm": s_s, "norms": nm_s}
+        return p, s
+
+    def _run(params, x, cache, remat=False):
+        new_m, new_s = [], []
+        mi = si = 0
+        for j in range(cfg.n_layers):
+            if (j + 1) % ev == 0:   # sLSTM block
+                def fn(p, xv, si=si, j=j):
+                    nm = jax.tree.map(lambda a: a[j], p["norms"])
+                    h = rms_norm(xv, nm["pre"])
+                    pl = jax.tree.map(lambda a: a[si], p["slstm"])
+                    csl = (jax.tree.map(lambda a: a[si], cache["s"])
+                           if cache is not None else None)
+                    return XL.slstm_block(pl, h, cfg, cache=csl)
+                if remat and cache is None:
+                    fn = jax.checkpoint(fn, prevent_cse=False)
+                o, nc = fn(params, x)
+                if nc is not None:
+                    new_s.append(nc)
+                si += 1
+            else:                   # mLSTM block
+                def fn(p, xv, mi=mi, j=j):
+                    nm = jax.tree.map(lambda a: a[j], p["norms"])
+                    h = rms_norm(xv, nm["pre"])
+                    pl = jax.tree.map(lambda a: a[mi], p["mlstm"])
+                    csl = (jax.tree.map(lambda a: a[mi], cache["m"])
+                           if cache is not None else None)
+                    return XL.mlstm_block(pl, h, cfg, cache=csl)
+                if remat and cache is None:
+                    fn = jax.checkpoint(fn, prevent_cse=False)
+                o, nc = fn(params, x)
+                if nc is not None:
+                    new_m.append(nc)
+                mi += 1
+            x = x + o
+        new_cache = None
+        if cache is not None:
+            stack = lambda cs: jax.tree.map(lambda *a: jnp.stack(a), *cs)
+            new_cache = {"m": stack(new_m), "s": stack(new_s)}
+        return x, new_cache
+
+    def forward(params, batch):
+        x = _embed(params["emb"], batch["tokens"], cfg, dt)
+        x, _ = _run(params, x, None, remat=True)
+        return _head(params["emb"], x, cfg), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+    def forward_fused(params, batch):
+        from .common import fused_cross_entropy
+        x = _embed(params["emb"], batch["tokens"], cfg, dt)
+        x, _ = _run(params, x, None, remat=True)
+        emb = params["emb"]
+        loss = fused_cross_entropy(x, emb["final_norm"], emb["out_emb"],
+                                   batch["labels"], batch.get("mask"),
+                                   cfg.final_softcap)
+        return loss, {"ce": loss}
+
+    def init_cache(B, T_max):
+        del T_max
+        c = XL.init_xlstm_caches(cfg, n_m, max(n_s, 1), B)
+        c["pos"] = jnp.zeros((B,), jnp.int32)
+        return c
+
+    def prefill(params, batch, cache):
+        x = _embed(params["emb"], batch["tokens"], cfg, dt)
+        sub = {"m": cache["m"], "s": cache["s"]}
+        x, nc = _run(params, x, sub)
+        nc["pos"] = cache["pos"] + x.shape[1]
+        return _head(params["emb"], x[:, -1:, :], cfg), nc
+
+    def decode(params, batch, cache):
+        x = _embed(params["emb"], batch["token"], cfg, dt)
+        sub = {"m": cache["m"], "s": cache["s"]}
+        x, nc = _run(params, x, sub)
+        nc["pos"] = batch["pos"] + 1
+        return _head(params["emb"], x, cfg), nc
+
+    return ModelBundle(cfg, init, forward, prefill, decode, init_cache,
+                       forward_fused)

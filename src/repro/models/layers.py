@@ -1,0 +1,234 @@
+"""Transformer building blocks with cache support (pure JAX).
+
+Conventions:
+  * params are nested dicts of arrays; leading `L` dim when stacked for
+    lax.scan over layers,
+  * every attention works in three modes: train/forward (no cache),
+    prefill (build cache), decode (read+update cache, q_len == 1),
+  * per-sequence decode positions `pos: (B,)` (ragged serving) — cache
+    updates are vmapped dynamic_update_slice.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (gqa_attention, gated_mlp, make_causal_mask,
+                     make_local_mask, rms_norm, rope, softcap)
+from repro.kernels.flash_attention import flash_attention
+
+# Above this many query positions the dense O(T·S) logit tensor is
+# replaced by blockwise/banded flash attention (kernels/flash_attention)
+# — memory O(block² ) instead of O(T·S).  prefill_32k would otherwise
+# materialize hundreds of GB per device (EXPERIMENTS.md §Dry-run).
+FLASH_MIN_T = 1024
+
+
+# ----------------------------------------------------------------------
+# parameter init helpers
+# ----------------------------------------------------------------------
+def _norm(key, shape):  # rms scale, init zeros (scale = 1 + w)
+    return jnp.zeros(shape, jnp.float32)
+
+
+def dense_init(key, d_in, d_out, logical, scale=None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * s
+
+
+def attn_params(key, cfg, n_layers: int) -> Tuple[Dict, Dict]:
+    """Stacked GQA attention params for `n_layers` layers."""
+    D, Hq, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    L = n_layers
+    p = {
+        "wq": jax.random.normal(ks[0], (L, D, Hq * Dh), jnp.float32) / math.sqrt(D),
+        "wk": jax.random.normal(ks[1], (L, D, Hkv * Dh), jnp.float32) / math.sqrt(D),
+        "wv": jax.random.normal(ks[2], (L, D, Hkv * Dh), jnp.float32) / math.sqrt(D),
+        "wo": jax.random.normal(ks[3], (L, Hq * Dh, D), jnp.float32) / math.sqrt(Hq * Dh),
+    }
+    spec = {
+        "wq": ("layers", "embed", "qheads"),
+        "wk": ("layers", "embed", "kvheads"),
+        "wv": ("layers", "embed", "kvheads"),
+        "wo": ("layers", "qheads", "embed"),
+    }
+    return p, spec
+
+
+def mlp_params(key, d_model: int, d_ff: int, n_layers: int) -> Tuple[Dict, Dict]:
+    ks = jax.random.split(key, 3)
+    L = n_layers
+    p = {
+        "w_gate": jax.random.normal(ks[0], (L, d_model, d_ff), jnp.float32) / math.sqrt(d_model),
+        "w_up": jax.random.normal(ks[1], (L, d_model, d_ff), jnp.float32) / math.sqrt(d_model),
+        "w_down": jax.random.normal(ks[2], (L, d_ff, d_model), jnp.float32) / math.sqrt(d_ff),
+    }
+    spec = {
+        "w_gate": ("layers", "embed", "mlp"),
+        "w_up": ("layers", "embed", "mlp"),
+        "w_down": ("layers", "mlp", "embed"),
+    }
+    return p, spec
+
+
+def norms_params(n_layers: int, d_model: int, names) -> Tuple[Dict, Dict]:
+    p = {n: jnp.zeros((n_layers, d_model), jnp.float32) for n in names}
+    spec = {n: ("layers", "embed") for n in names}
+    return p, spec
+
+
+# ----------------------------------------------------------------------
+# attention (one layer, unstacked params)
+# ----------------------------------------------------------------------
+def _update_cache(cache_kv, new_kv, pos):
+    """cache (B, T, H, Dh) <- new (B, t, H, Dh) at per-batch pos (B,)."""
+    from .common import sharded_batch_update
+    return sharded_batch_update(cache_kv, new_kv, pos)
+
+
+def _update_ring(cache_kv, kpos, new_kv, new_pos):
+    """Sliding-window ring cache of width W.  new: (B, t, H, Dh) written
+    at slots (new_pos + i) % W.  kpos tracks absolute positions (-1 =
+    empty slot)."""
+    W = cache_kv.shape[1]
+    B, t = new_kv.shape[0], new_kv.shape[1]
+
+    def upd(c, kp, n, p0):
+        idx = (p0 + jnp.arange(t)) % W
+        c = c.at[idx].set(n.astype(c.dtype))
+        kp = kp.at[idx].set(p0 + jnp.arange(t))
+        return c, kp
+    return jax.vmap(upd)(cache_kv, kpos, new_kv, new_pos)
+
+
+def attention(p, x, *, cfg, window=None, cache=None,
+              attn_softcap: float = 0.0, rope_base: float = 10000.0):
+    """One GQA attention layer.
+
+    `window`: sliding-window size (may be a TRACED per-layer scalar —
+    gemma2's alternating local/global stack scans one code path with a
+    per-layer window array; `None`/huge => pure causal).
+    cache: None (train/forward) or dict(k, v[, kpos], pos) — `pos` is the
+    per-sequence write offset (B,).  Returns (out, new_cache).
+    """
+    B, T, D = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cdt = x.dtype
+    q = (x @ p["wq"].astype(cdt)).reshape(B, T, Hq, Dh)
+    k = (x @ p["wk"].astype(cdt)).reshape(B, T, Hkv, Dh)
+    v = (x @ p["wv"].astype(cdt)).reshape(B, T, Hkv, Dh)
+
+    if cache is None:
+        positions = jnp.arange(T)[None, :]
+        q = rope(q, positions, rope_base)
+        k = rope(k, positions, rope_base)
+        if T >= FLASH_MIN_T:
+            qpos = jnp.broadcast_to(positions, (B, T)).astype(jnp.int32)
+            out = flash_attention(q, k, v, qpos=qpos, window=window,
+                                  softcap=attn_softcap or 0.0)
+        else:
+            mask = (make_causal_mask(T, T, 0) if window is None
+                    else make_local_mask(T, T, 0, window))
+            out = gqa_attention(q, k, v, mask, attn_softcap)
+        new_cache = None
+    else:
+        pos = cache["pos"]                       # (B,)
+        positions = pos[:, None] + jnp.arange(T)[None, :]
+        q = rope(q, positions, rope_base)
+        k = rope(k, positions, rope_base)
+        if "kpos" in cache:                      # ring (sliding window)
+            ck, kp = _update_ring(cache["k"], cache["kpos"], k, pos)
+            cv, _ = _update_ring(cache["v"], cache["kpos"], v, pos)
+            if T > 1:
+                # Windowed prefill: attend banded over THIS call's tokens
+                # (ring slots are overwritten T/W times during a long
+                # prefill, so they cannot serve early queries).  Exact for
+                # prefill-from-0; a continued chunked prefill loses the
+                # previous chunk's tail — chunk >= window to avoid.
+                out = flash_attention(q, k, v, qpos=positions.astype(jnp.int32),
+                                      window=int(cfg.window),
+                                      softcap=attn_softcap or 0.0)
+            else:
+                # decode: mask ring slots to (q_pos-W, q_pos]
+                qpos = positions                 # (B, T)
+                valid = (kp[:, None, :] <= qpos[:, :, None]) & \
+                        (kp[:, None, :] > qpos[:, :, None] - cfg.window) & \
+                        (kp[:, None, :] >= 0)
+                out = gqa_attention(q, ck.astype(cdt), cv.astype(cdt),
+                                    valid, attn_softcap)
+            new_cache = {"k": ck, "v": cv, "kpos": kp, "pos": pos + T}
+        else:                                    # full cache
+            ck = _update_cache(cache["k"], k, pos)
+            cv = _update_cache(cache["v"], v, pos)
+            Tmax = ck.shape[1]
+            if T >= FLASH_MIN_T:
+                out = flash_attention(q, ck.astype(cdt), cv.astype(cdt),
+                                      qpos=positions.astype(jnp.int32),
+                                      window=window,
+                                      softcap=attn_softcap or 0.0)
+            else:
+                kpos = jnp.arange(Tmax)[None, :]
+                qpos = positions
+                valid = kpos[:, None, :] <= qpos[:, :, None]
+                if window is not None:
+                    valid &= kpos[:, None, :] > qpos[:, :, None] - window
+                out = gqa_attention(q, ck.astype(cdt), cv.astype(cdt),
+                                    valid, attn_softcap)
+            new_cache = {"k": ck, "v": cv, "pos": pos + T}
+    out = out.reshape(B, T, Hq * Dh) @ p["wo"].astype(cdt)
+    return out, new_cache
+
+
+def cross_attention(p, x, kv_src, *, cfg):
+    """Cross-attention (whisper decoder, llama-vision): q from x, kv from
+    a precomputed source (B, S_kv, D_src).  kv projections may be cached
+    (pass kv_cache=(k, v)) — here we recompute for simplicity of the
+    dry-run path; serve caches at prefill."""
+    B, T, D = x.shape
+    Hq, Dh = cfg.n_heads, cfg.head_dim
+    cdt = x.dtype
+    q = (x @ p["wq"].astype(cdt)).reshape(B, T, Hq, Dh)
+    k = (kv_src @ p["wk"].astype(cdt)).reshape(B, -1, Hq, Dh)
+    v = (kv_src @ p["wv"].astype(cdt)).reshape(B, -1, Hq, Dh)
+    Skv = k.shape[1]
+    mask = jnp.ones((T, Skv), bool)
+    out = gqa_attention(q, k, v, mask)
+    return out.reshape(B, T, Hq * Dh) @ p["wo"].astype(cdt)
+
+
+def cross_attn_params(key, cfg, n_layers: int, d_src: int) -> Tuple[Dict, Dict]:
+    D, Hq, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    L = n_layers
+    p = {
+        "wq": jax.random.normal(ks[0], (L, D, Hq * Dh), jnp.float32) / math.sqrt(D),
+        "wk": jax.random.normal(ks[1], (L, d_src, Hq * Dh), jnp.float32) / math.sqrt(d_src),
+        "wv": jax.random.normal(ks[2], (L, d_src, Hq * Dh), jnp.float32) / math.sqrt(d_src),
+        "wo": jax.random.normal(ks[3], (L, Hq * Dh, D), jnp.float32) / math.sqrt(Hq * Dh),
+    }
+    spec = {"wq": ("layers", "embed", "qheads"),
+            "wk": ("layers", "vision", "qheads"),
+            "wv": ("layers", "vision", "qheads"),
+            "wo": ("layers", "qheads", "embed")}
+    return p, spec
+
+
+def init_full_cache(cfg, n_layers, B, T_max, dtype=jnp.bfloat16):
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_layers, B, T_max, Hkv, Dh), dtype),
+        "v": jnp.zeros((n_layers, B, T_max, Hkv, Dh), dtype),
+    }
+
+
+def init_ring_cache(cfg, n_layers, B, dtype=jnp.bfloat16):
+    W, Hkv, Dh = cfg.window, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_layers, B, W, Hkv, Dh), dtype),
+        "v": jnp.zeros((n_layers, B, W, Hkv, Dh), dtype),
+        "kpos": jnp.full((n_layers, B, W), -1, jnp.int32),
+    }

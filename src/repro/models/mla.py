@@ -1,0 +1,148 @@
+"""Multi-head Latent Attention (deepseek-v3, arXiv:2412.19437).
+
+Queries go through a low-rank bottleneck (q_lora); keys/values through a
+compressed latent c_kv (kv_lora) plus a small shared RoPE key.  The KV
+cache stores ONLY (c_kv, k_rope) = kv_lora + d_rope floats per token —
+the technique's serving win.
+
+Decode uses the weight-absorption identity:
+    q_nope^T k_nope = (q_nope W_uk^T) c_kv
+so scores and values are computed directly against the compressed cache
+without rematerializing per-head K/V.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import make_causal_mask, rope
+
+
+def mla_params(key, cfg, n_layers: int) -> Tuple[Dict, Dict]:
+    m, D, H = cfg.mla, cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    L = n_layers
+
+    def nrm(k, shape, fan):
+        return jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan)
+
+    p = {
+        "wq_a": nrm(ks[0], (L, D, m.q_lora), D),                       # down
+        "wq_b": nrm(ks[1], (L, m.q_lora, H * (m.d_nope + m.d_rope)), m.q_lora),
+        "wkv_a": nrm(ks[2], (L, D, m.kv_lora + m.d_rope), D),          # down
+        "wk_b": nrm(ks[3], (L, m.kv_lora, H * m.d_nope), m.kv_lora),   # up: K
+        "wv_b": nrm(ks[4], (L, m.kv_lora, H * m.d_v), m.kv_lora),      # up: V
+        "wo": nrm(ks[5], (L, H * m.d_v, D), H * m.d_v),
+        "q_norm": jnp.zeros((L, m.q_lora), jnp.float32),
+        "kv_norm": jnp.zeros((L, m.kv_lora), jnp.float32),
+    }
+    spec = {
+        "wq_a": ("layers", "embed", "lora"),
+        "wq_b": ("layers", "lora", "qheads"),
+        "wkv_a": ("layers", "embed", "lora"),
+        "wk_b": ("layers", "lora", "qheads"),
+        "wv_b": ("layers", "lora", "qheads"),
+        "wo": ("layers", "qheads", "embed"),
+        "q_norm": ("layers", "lora"),
+        "kv_norm": ("layers", "lora"),
+    }
+    return p, spec
+
+
+def _split_q(q, H, m):
+    qn, qr = q[..., :H * m.d_nope], q[..., H * m.d_nope:]
+    return (qn.reshape(*q.shape[:-1], H, m.d_nope),
+            qr.reshape(*q.shape[:-1], H, m.d_rope))
+
+
+def mla_attention(p, x, cfg, *, cache: Optional[Dict] = None,
+                  rope_base: float = 10000.0):
+    """Returns (out, new_cache).  cache = {ckv (B,Tmax,kv_lora+d_rope),
+    pos (B,)}; None => full-sequence forward (train / prefill-style)."""
+    from .common import rms_norm
+    m, H = cfg.mla, cfg.n_heads
+    B, T, D = x.shape
+    cdt = x.dtype
+    q = rms_norm(x @ p["wq_a"].astype(cdt), p["q_norm"])
+    q = q @ p["wq_b"].astype(cdt)
+    q_nope, q_rope = _split_q(q, H, m)                       # (B,T,H,dn),(B,T,H,dr)
+
+    kv = x @ p["wkv_a"].astype(cdt)                          # (B,T,kv_lora+dr)
+    c_kv, k_rope = kv[..., :m.kv_lora], kv[..., m.kv_lora:]
+    c_kv = rms_norm(c_kv, p["kv_norm"])
+
+    if cache is None:
+        positions = jnp.arange(T)[None, :]
+        q_rope = rope(q_rope, positions, rope_base)
+        k_rope_r = rope(k_rope[..., None, :], positions, rope_base)[..., 0, :]
+        mask = make_causal_mask(T, T, 0)
+        ckv_all, kr_all = c_kv, k_rope_r
+        qpos_mask = mask[None]
+        new_cache = None
+    else:
+        pos = cache["pos"]
+        positions = pos[:, None] + jnp.arange(T)[None, :]
+        q_rope = rope(q_rope, positions, rope_base)
+        k_rope_r = rope(k_rope[..., None, :], positions, rope_base)[..., 0, :]
+        new = jnp.concatenate([c_kv, k_rope_r], -1)
+
+        from .common import sharded_batch_update
+        ckv_full = sharded_batch_update(cache["ckv"], new, pos)
+        ckv_all = ckv_full[..., :m.kv_lora].astype(cdt)
+        kr_all = ckv_full[..., m.kv_lora:].astype(cdt)
+        Tmax = ckv_all.shape[1]
+        kpos = jnp.arange(Tmax)[None, :]
+        qpos_mask = (kpos[:, None, :] <= positions[:, :, None])
+        new_cache = {"ckv": ckv_full, "pos": pos + T}
+
+    # --- absorbed attention against the compressed cache --------------
+    # scores_nope[b,h,t,s] = q_nope . W_uk . c_kv   (absorb W_uk into q)
+    wk_b = p["wk_b"].astype(cdt).reshape(m.kv_lora, H, m.d_nope)
+    q_abs = jnp.einsum("bthd,chd->bthc", q_nope, wk_b)
+    scale = 1.0 / math.sqrt(m.d_nope + m.d_rope)
+    if T >= 1024:
+        # §Perf iteration: NAIVE (unabsorbed) form for train/prefill —
+        # materialize per-head K/V from the latent once, then blockwise
+        # flash MHA with Dh = d_nope + d_rope.  The absorbed form pays
+        # 2·T·S·H·(2c + r) score+value FLOPs vs the naive
+        # 2·T·S·H·(d_nope + d_rope + d_v) — 3.4x more at dsv3 dims; it
+        # only wins at decode (T=1), where re-expanding the whole cache
+        # per step would dominate.  Up-projection cost 2·S·c·H·(dn+dv)
+        # is negligible vs the T·S terms (napkin in EXPERIMENTS §Perf).
+        from repro.kernels.flash_attention import flash_attention
+        S = ckv_all.shape[1]
+        k_nope = jnp.einsum("bsc,chd->bshd", ckv_all, wk_b)   # (B,S,H,dn)
+        wv_b_ = p["wv_b"].astype(cdt).reshape(m.kv_lora, H, m.d_v)
+        v_full = jnp.einsum("bsc,chv->bshv", ckv_all, wv_b_)  # (B,S,H,dv)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                      (B, S, H, m.d_rope))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)        # (B,T,H,dn+r)
+        qpos = (positions if cache is not None
+                else jnp.broadcast_to(positions, (B, T))).astype(jnp.int32)
+        o = flash_attention(q_full, k_full, v_full, qpos=qpos,
+                            window=None, scale=scale)         # (B,T,H,dv)
+        out = o.reshape(B, T, H * m.d_v) @ p["wo"].astype(cdt)
+        return out, new_cache
+    else:
+        s_nope = jnp.einsum("bthc,bsc->bhts", q_abs, ckv_all)
+        s_rope = jnp.einsum("bthr,bsr->bhts", q_rope, kr_all)
+        logits = (s_nope + s_rope).astype(jnp.float32) * scale
+        logits = jnp.where(
+            qpos_mask[:, None] if qpos_mask.ndim == 3 else qpos_mask,
+            logits, -1e30)
+        probs = jax.nn.softmax(logits, -1).astype(cdt)
+        # out latent: attn over compressed values, then absorb W_uv
+        o_lat = jnp.einsum("bhts,bsc->bthc", probs, ckv_all)  # (B,T,H,kv_lora)
+    wv_b = p["wv_b"].astype(cdt).reshape(m.kv_lora, H, m.d_v)
+    o = jnp.einsum("bthc,chv->bthv", o_lat, wv_b)            # (B,T,H,d_v)
+    out = o.reshape(B, T, H * m.d_v) @ p["wo"].astype(cdt)
+    return out, new_cache
+
+
+def init_mla_cache(cfg, n_layers, B, T_max, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((n_layers, B, T_max, m.kv_lora + m.d_rope), dtype)}

@@ -1,0 +1,238 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, truly recurrent), attention-free.
+
+mLSTM runs CHUNKWISE for train/prefill: within a chunk the quadratic
+parallel form, across chunks the (C, n, m) recurrent state — O(T * chunk)
+not O(T^2), which is what makes prefill_32k / long_500k tractable.
+Decode is the pure recurrent step.
+
+sLSTM has a genuine sequential dependency (recurrent weights R act on
+h_{t-1}), so it runs under lax.scan; with d_model=768 x 12 blocks this
+is cheap relative to the mLSTM stack.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------
+def mlstm_params(key, cfg, n_layers: int) -> Tuple[Dict, Dict]:
+    D = cfg.d_model
+    Dm = int(D * cfg.xlstm.proj_factor)      # inner width
+    H = cfg.n_heads
+    Dh = Dm // H
+    ks = jax.random.split(key, 8)
+    L = n_layers
+
+    def nrm(k, shape, fan):
+        return jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan)
+
+    p = {
+        "w_up": nrm(ks[0], (L, D, 2 * Dm), D),        # x branch + ogate branch
+        "w_q": nrm(ks[1], (L, Dm, Dm), Dm),
+        "w_k": nrm(ks[2], (L, Dm, Dm), Dm),
+        "w_v": nrm(ks[3], (L, Dm, Dm), Dm),
+        "w_if": nrm(ks[4], (L, Dm, 2 * H), Dm),       # input & forget gates
+        "b_if": jnp.zeros((L, 2 * H), jnp.float32),
+        "skip": nrm(ks[6], (L, Dm, Dm), Dm) * 0.1,
+        "w_down": nrm(ks[5], (L, Dm, D), Dm),
+    }
+    spec = {
+        "w_up": ("layers", "embed", "inner"),
+        "w_q": ("layers", "inner", "inner"),
+        "w_k": ("layers", "inner", "inner"),
+        "w_v": ("layers", "inner", "inner"),
+        "w_if": ("layers", "inner", "gates"),
+        "b_if": ("layers", "gates"),
+        "skip": ("layers", "inner", "inner"),
+        "w_down": ("layers", "inner", "embed"),
+    }
+    return p, spec
+
+
+def _mlstm_chunk(q, k, v, ig, fg, state):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    q,k,v: (B,H,t,Dh); ig,fg: (B,H,t) log-gates; state=(C,n,m):
+    C (B,H,Dh,Dh), n (B,H,Dh), m (B,H).  Returns (out, new_state).
+    Stabilized exponential gating per the paper (max-state m).
+    """
+    B, H, t, Dh = q.shape
+    lf = jax.nn.log_sigmoid(fg)                              # (B,H,t)
+    F = jnp.cumsum(lf, axis=-1)                              # cumulative
+    C_prev, n_prev, m_prev = state
+    # log weights for intra-chunk pairs: D[i,j] = F_i - F_j + ig_j  (j<=i)
+    Dmat = F[..., :, None] - F[..., None, :] + ig[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    Dmat = jnp.where(mask, Dmat, -jnp.inf)
+    # inter-chunk weight for the carried state: F_i + m_prev
+    inter = F + m_prev[..., None]                            # (B,H,t)
+    m_new = jnp.maximum(jnp.max(Dmat, axis=-1), inter)       # (B,H,t)
+    m_new = jnp.maximum(m_new, -1e30)
+    Wd = jnp.exp(Dmat - m_new[..., None])                    # (B,H,t,t)
+    Wi = jnp.exp(inter - m_new)                              # (B,H,t)
+    scale = 1.0 / math.sqrt(Dh)
+    s_intra = jnp.einsum("bhtd,bhsd->bhts", q * scale, k) * Wd
+    num = jnp.einsum("bhts,bhsd->bhtd", s_intra, v) \
+        + jnp.einsum("bhtd,bhde->bhte", q * scale, C_prev) * Wi[..., None]
+    den = jnp.abs(jnp.einsum("bhts->bht", s_intra)
+                  + jnp.einsum("bhtd,bhd->bht", q * scale, n_prev) * Wi)
+    out = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    # ---- state update to end of chunk --------------------------------
+    lf_total = F[..., -1]                                    # (B,H)
+    m_end = jnp.maximum(lf_total + m_prev, jnp.max(ig + (lf_total[..., None] - F), axis=-1))
+    w_prev = jnp.exp(lf_total + m_prev - m_end)              # carry decay
+    w_tok = jnp.exp(ig + (lf_total[..., None] - F) - m_end[..., None])  # (B,H,t)
+    C_new = C_prev * w_prev[..., None, None] \
+        + jnp.einsum("bhtd,bhte,bht->bhde", k, v, w_tok)
+    n_new = n_prev * w_prev[..., None] + jnp.einsum("bhtd,bht->bhd", k, w_tok)
+    return out, (C_new, n_new, m_end)
+
+
+def mlstm_block(p, x, cfg, *, cache: Optional[Dict] = None, chunk: int = 256):
+    """x (B,T,D) -> (out, new_cache).  cache = {C,n,m} for decode."""
+    cdt = x.dtype
+    B, T, D = x.shape
+    H = cfg.n_heads
+    up = x @ p["w_up"].astype(cdt)
+    Dm = up.shape[-1] // 2
+    xi, og = up[..., :Dm], jax.nn.silu(up[..., Dm:])
+    q = (xi @ p["w_q"].astype(cdt)).reshape(B, T, H, -1).transpose(0, 2, 1, 3)
+    k = (xi @ p["w_k"].astype(cdt)).reshape(B, T, H, -1).transpose(0, 2, 1, 3)
+    v = (xi @ p["w_v"].astype(cdt)).reshape(B, T, H, -1).transpose(0, 2, 1, 3)
+    gif = (xi @ p["w_if"].astype(cdt) + p["b_if"].astype(cdt)).astype(jnp.float32)
+    ig, fg = gif[..., :H].transpose(0, 2, 1), gif[..., H:].transpose(0, 2, 1)
+    Dh = q.shape[-1]
+
+    if cache is not None and T == 1:
+        # pure recurrent decode step
+        C, n, m = cache["C"], cache["n"], cache["m"]
+        lf = jax.nn.log_sigmoid(fg[..., 0])
+        m_new = jnp.maximum(lf + m, ig[..., 0])
+        wi = jnp.exp(ig[..., 0] - m_new)
+        wf = jnp.exp(lf + m - m_new)
+        k1, v1, q1 = k[:, :, 0], v[:, :, 0], q[:, :, 0] / math.sqrt(Dh)
+        C = C * wf[..., None, None] + jnp.einsum("bhd,bhe->bhde", k1, v1) * wi[..., None, None]
+        n = n * wf[..., None] + k1 * wi[..., None]
+        num = jnp.einsum("bhd,bhde->bhe", q1, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        h = h[:, :, None, :]  # (B,H,1,Dh)
+        new_cache = {"C": C, "n": n, "m": m_new}
+    else:
+        state = ((cache["C"], cache["n"], cache["m"]) if cache is not None
+                 else (jnp.zeros((B, H, Dh, Dh), jnp.float32),
+                       jnp.zeros((B, H, Dh), jnp.float32),
+                       jnp.zeros((B, H), jnp.float32)))
+        nchunks = max(1, T // chunk)
+        if T % chunk == 0 and nchunks > 1:
+            def step(st, args):
+                qc, kc, vc, igc, fgc = args
+                o, st2 = _mlstm_chunk(qc, kc, vc, igc, fgc, st)
+                return st2, o
+            resh = lambda a: a.reshape(B, H, nchunks, chunk, -1).transpose(2, 0, 1, 3, 4)
+            reshg = lambda a: a.reshape(B, H, nchunks, chunk).transpose(2, 0, 1, 3)
+            st, outs = jax.lax.scan(
+                step, state,
+                (resh(q.astype(jnp.float32)), resh(k.astype(jnp.float32)),
+                 resh(v.astype(jnp.float32)), reshg(ig), reshg(fg)))
+            h = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, T, Dh)
+        else:
+            h, st = _mlstm_chunk(q.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32), ig, fg, state)
+        new_cache = ({"C": st[0], "n": st[1], "m": st[2]}
+                     if cache is not None else None)
+    h = h.transpose(0, 2, 1, 3).reshape(B, T, Dm).astype(cdt)
+    h = h + xi @ p["skip"].astype(cdt)
+    out = (h * og) @ p["w_down"].astype(cdt)
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------
+def slstm_params(key, cfg, n_layers: int) -> Tuple[Dict, Dict]:
+    D, H = cfg.d_model, cfg.n_heads
+    Dh = D // H
+    ks = jax.random.split(key, 4)
+    L = n_layers
+
+    def nrm(k, shape, fan):
+        return jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan)
+
+    ffd = int(D * 4 * cfg.xlstm.ff_factor) // 2 * 2
+    p = {
+        "w_in": nrm(ks[0], (L, D, 4 * D), D),       # i,f,z,o pre-acts
+        "r_in": nrm(ks[1], (L, H, Dh, 4 * Dh), Dh) * 0.5,  # block-diag recurrent
+        "b_in": jnp.zeros((L, 4 * D), jnp.float32),
+        "w_ff1": nrm(ks[2], (L, D, ffd), D),
+        "w_ff2": nrm(ks[3], (L, ffd, D), ffd),
+    }
+    spec = {
+        "w_in": ("layers", "embed", "gates"),
+        "r_in": ("layers", "heads", "head_dim", "gates"),
+        "b_in": ("layers", "gates"),
+        "w_ff1": ("layers", "embed", "mlp"),
+        "w_ff2": ("layers", "mlp", "embed"),
+    }
+    return p, spec
+
+
+def slstm_block(p, x, cfg, *, cache: Optional[Dict] = None):
+    """Sequential sLSTM with exponential gating + stabilizer state.
+    cache = {c,n,h,m} each (B, D) (heads flattened); (out, new_cache)."""
+    cdt = x.dtype
+    B, T, D = x.shape
+    H = cfg.n_heads
+    Dh = D // H
+    pre_x = x @ p["w_in"].astype(cdt) + p["b_in"].astype(cdt)   # (B,T,4D)
+
+    if cache is not None:
+        c0, n0, h0, m0 = (cache[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
+    else:
+        c0 = n0 = h0 = jnp.zeros((B, D), jnp.float32)
+        m0 = jnp.zeros((B, D), jnp.float32)
+    r = p["r_in"].astype(jnp.float32)                            # (H,Dh,4Dh)
+
+    def step(carry, px):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, Dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r).reshape(B, 4 * D)
+        pre = px.astype(jnp.float32) + rec
+        i_, f_, z_, o_ = jnp.split(pre, 4, axis=-1)
+        m_new = jnp.maximum(f_ + m, i_)
+        i_g = jnp.exp(i_ - m_new)
+        f_g = jnp.exp(f_ + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(z_)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(o_) * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c1, n1, h1, m1), hs = jax.lax.scan(step, (c0, n0, h0, m0),
+                                        pre_x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(cdt)                       # (B,T,D)
+    out = jax.nn.gelu(hs @ p["w_ff1"].astype(cdt)) @ p["w_ff2"].astype(cdt)
+    new_cache = ({"c": c1, "n": n1, "h": h1, "m": m1}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def init_xlstm_caches(cfg, n_m: int, n_s: int, B):
+    D, H = cfg.d_model, cfg.n_heads
+    Dm = int(D * cfg.xlstm.proj_factor)
+    Dh = Dm // H
+    return {
+        "m": {"C": jnp.zeros((n_m, B, H, Dh, Dh), jnp.float32),
+              "n": jnp.zeros((n_m, B, H, Dh), jnp.float32),
+              "m": jnp.zeros((n_m, B, H), jnp.float32)},
+        "s": {"c": jnp.zeros((n_s, B, D), jnp.float32),
+              "n": jnp.zeros((n_s, B, D), jnp.float32),
+              "h": jnp.zeros((n_s, B, D), jnp.float32),
+              "m": jnp.zeros((n_s, B, D), jnp.float32)},
+    }

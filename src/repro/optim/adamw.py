@@ -1,0 +1,184 @@
+"""AdamW in pure JAX with large-scale options:
+
+  * moment dtype control — fp32 / bf16 / int8-quantized (blockwise)
+    first+second moments.  At 671B params the optimizer state is the
+    single biggest HBM consumer; bf16 moments fit deepseek-v3 train_4k
+    on the assigned 16x16 pod (see EXPERIMENTS.md §Dry-run).
+  * gradient compression for the cross-pod all-reduce (none / bf16 /
+    int8 stochastic) — applied before the data-parallel mean when
+    enabled in TrainConfig (a distributed-optimization trick the paper's
+    GDEF machinery makes safe: the compressed reduce is still the
+    planner-scheduled message, just narrower).
+  * global-norm clipping, cosine/linear schedules, decoupled weight decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "fp32"       # fp32 | bf16 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"         # cosine | linear | const
+    int8_block: int = 256            # blockwise-quant block size
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any        # pytree, dtype per moment_dtype (int8: (q, scale))
+    nu: Any
+
+
+# ---------------------------------------------------------------------
+# int8 blockwise quantization of moments (bitsandbytes-style)
+# ---------------------------------------------------------------------
+def _q8(x, block: int):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blk = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blk), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blk / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), x.shape, pad
+
+
+def _dq8(q, scale, shape, pad):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def _store(x, dtype: str, block: int):
+    if dtype == "fp32":
+        return x
+    if dtype == "bf16":
+        return x.astype(jnp.bfloat16)
+    q, s, shape, pad = _q8(x, block)
+    return {"q": q, "s": s}
+
+
+def _load(x, dtype: str, like, block: int):
+    if dtype == "fp32":
+        return x
+    if dtype == "bf16":
+        return x.astype(jnp.float32)
+    flat = like.reshape(-1)
+    pad = (-flat.size) % block
+    return _dq8(x["q"], x["s"], like.shape, pad)
+
+
+# ---------------------------------------------------------------------
+def schedule_lr(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - t
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(cfg: AdamWConfig, params) -> OptState:
+    zero = lambda p: _store(jnp.zeros_like(p, jnp.float32), cfg.moment_dtype,
+                            cfg.int8_block)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(zero, params),
+                    nu=jax.tree.map(zero, params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: OptState,
+                  decay_mask: Optional[Any] = None):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else 1.0
+    lr = schedule_lr(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu_s, nu_s, wd_on):
+        g = g.astype(jnp.float32) * scale
+        mu = _load(mu_s, cfg.moment_dtype, p, cfg.int8_block)
+        nu = _load(nu_s, cfg.moment_dtype, p, cfg.int8_block)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * wd_on * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return (newp,
+                _store(mu, cfg.moment_dtype, cfg.int8_block),
+                _store(nu, cfg.moment_dtype, cfg.int8_block))
+
+    if decay_mask is None:
+        decay_mask = jax.tree.map(lambda p: float(p.ndim >= 2), params)
+    moved = jax.tree.map(upd, params, grads, state.mu, state.nu, decay_mask,
+                         is_leaf=lambda x: isinstance(x, jax.Array)
+                         or isinstance(x, dict) and set(x) == {"q", "s"})
+    new_p = jax.tree.map(lambda t: t[0], moved,
+                         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_mu = jax.tree.map(lambda t: t[1], moved,
+                          is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_nu = jax.tree.map(lambda t: t[2], moved,
+                          is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(step, new_mu, new_nu), metrics
+
+
+# ---------------------------------------------------------------------
+# gradient compression for the DP all-reduce
+# ---------------------------------------------------------------------
+def compress_grads(grads, mode: str, key: Optional[jax.Array] = None):
+    """Cast/quantize gradients before the data-parallel mean.  int8 uses
+    stochastic rounding to stay unbiased."""
+    if mode in (None, "none"):
+        return grads
+    if mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    if mode == "int8":
+        ks = jax.random.split(key, len(jax.tree.leaves(grads)))
+        it = iter(ks)
+
+        def q(g):
+            s = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+            noise = jax.random.uniform(next(it), g.shape) - 0.5
+            return (jnp.clip(jnp.round(g / s + noise), -127, 127)
+                    .astype(jnp.int8), s)
+        return jax.tree.map(q, grads)
+    raise ValueError(mode)
+
+
+def decompress_grads(grads, mode: str):
+    if mode in (None, "none"):
+        return grads
+    if mode == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if mode == "int8":
+        return jax.tree.map(lambda t: t[0].astype(jnp.float32) * t[1], grads,
+                            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    raise ValueError(mode)

@@ -1,0 +1,69 @@
+"""Attribution: break the HLO cost walk down by op_name metadata — the
+'profile' of the dry-run (no hardware, so attribution over the lowered
+IR replaces a wall-clock trace).  Used by the §Perf hillclimb loop to
+find WHERE the dominant roofline term goes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+from . import hlo_costs as H
+
+
+def _tag(op, depth: int = 2) -> str:
+    m = re.search(r'op_name="([^"]+)"', op.rest)
+    nm = m.group(1) if m else f"<{op.opcode}>"
+    return op.opcode + " | " + "/".join(nm.split("/")[-depth:])
+
+
+def costs_by_tag(text: str, depth: int = 2
+                 ) -> Tuple[Dict[str, float], Dict[str, float], Dict[str, float]]:
+    """Returns (flops_by_tag, bytes_by_tag, coll_by_tag), trip-weighted."""
+    model = H.HloCostModel(text)
+    flops = defaultdict(float)
+    byts = defaultdict(float)
+    coll = defaultdict(float)
+
+    def walk(name: str, mult: float):
+        comp = model.comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.opcode == "while":
+                mt = re.search(r'known_trip_count....n.:.(\d+)', op.rest)
+                trip = int(mt.group(1)) if mt else 1
+                mb = re.search(r"body=%([\w\.\-]+)", op.rest)
+                if mb:
+                    walk(mb.group(1), mult * trip)
+                continue
+            if op.opcode == "dot":
+                flops[_tag(op, depth)] += H._dot_flops(op, comp.types) * mult
+            base = (op.opcode[:-6] if op.opcode.endswith("-start")
+                    else op.opcode)
+            if base in H.COLLECTIVES:
+                b = sum(H._type_bytes(comp.types.get(o, ""))
+                        for o in op.operands)
+                coll[_tag(op, depth)] += b * mult
+            if op.opcode not in H._FREE_OPS:
+                byts[_tag(op, depth)] += model._op_bytes(op, comp) * mult
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%([\w\.\-]+)", op.rest)
+                if m:  # flops inside fusions still count
+                    sub = model._walk(m.group(1), count_bytes=False)
+                    flops[_tag(op, depth)] += sub.flops * mult
+                continue
+            for mm in H._CALL_ATTRS.finditer(op.rest):
+                walk(mm.group(1), mult)
+
+    walk(model.entry, 1.0)
+    return dict(flops), dict(byts), dict(coll)
+
+
+def top(d: Dict[str, float], n: int = 12) -> str:
+    tot = sum(d.values()) or 1.0
+    lines = [f"  total {tot:.3e}"]
+    for k, v in sorted(d.items(), key=lambda kv: -kv[1])[:n]:
+        lines.append(f"  {v:.3e} {v/tot*100:5.1f}%  {k}")
+    return "\n".join(lines)

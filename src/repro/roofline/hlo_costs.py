@@ -1,0 +1,391 @@
+"""HLO cost walker: FLOPs / HBM bytes / collective bytes from the
+optimized post-SPMD module text, with while-loop trip counts.
+
+Why not ``compiled.cost_analysis()``: XLA counts each `while` BODY once
+— a scan-over-layers train step under-reports FLOPs by ~L x microbatch
+factors, which would make roofline fractions meaningless.  This walker
+parses the module, builds the call graph (fusions / while / conditional
+/ to_apply), extracts each while's trip count from its condition's
+compare-against-constant, and accumulates:
+
+  * flops        — 2·M·N·K per dot (from result shape x contracting
+                   dims), executed-count weighted,
+  * hbm_bytes    — sum of (operand + result) sizes at FUSION BOUNDARY
+                   granularity (XLA's fusion model: internal temporaries
+                   of a fusion never touch HBM),
+  * coll_bytes   — per-device operand payload of each collective, by op
+                   kind, executed-count weighted.
+
+The walker is structural — no execution — so it works identically for a
+512-device multi-pod module on the CPU backend.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([^\s(]+)\s*\((.*?)\)\s*->")
+
+
+def _parse_op_line(line: str):
+    """`  ROOT %x = (tuple /*index=3*/ type) opcode(operands), attrs` ->
+    (name, result_type, opcode, rest-after-open-paren) or None."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name, rest = s[1:eq], s[eq + 3:]
+    if rest.startswith("("):          # tuple type: match parens manually
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        rtype, rest = rest[:end + 1], rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype, rest = rest[:sp], rest[sp + 1:].lstrip()
+    p = rest.find("(")
+    if p <= 0:
+        return None
+    return name, rtype, rest[:p], rest[p + 1:]
+_PARAM_RE = re.compile(r"%?([^\s:,()]+):\s*((?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _type_bytes(t: str) -> int:
+    """bytes of a type string — scalar, array, or tuple."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        total += _DTYPE_BYTES.get(dt, 4) * _shape_elems(dims)
+    return total
+
+
+def _first_array(t: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str            # operand list + attrs (rest of line)
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)   # op name -> type
+    params: List[str] = field(default_factory=list)       # ordered param names
+
+
+def _split_operands(rest: str) -> Tuple[List[str], str]:
+    """Split `a, b, c), attr=...` -> ([a, b, c], attrs)."""
+    depth = 0
+    out, cur = [], []
+    for i, ch in enumerate(rest):
+        if ch in "([{":
+            depth += 1
+            cur.append(ch)
+        elif ch in ")]}":
+            if depth == 0:
+                if cur:
+                    out.append("".join(cur).strip())
+                return out, rest[i + 1:]
+            depth -= 1
+            cur.append(ch)
+        elif ch == "," and depth == 0:
+            if cur:
+                out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    return out, ""
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            m = _HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                name = m.group(2)
+                cur = Computation(name)
+                comps[name] = cur
+                if m.group(1):
+                    entry = name
+                for pname, ptype in _PARAM_RE.findall(m.group(3)):
+                    cur.types[pname] = ptype
+                    cur.params.append(pname)
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_op_line(line)
+        if parsed is None:
+            continue
+        name, rtype, opcode, rest = parsed
+        operands, attrs = _split_operands(rest)
+        op = Op(name, rtype, opcode, attrs)
+        for o in operands:
+            # operand may be "%x" or "f32[..] %x" — take the last %token
+            toks = [t for t in o.split() if t.startswith("%")]
+            if toks:
+                op.operands.append(toks[-1][1:])
+        cur.ops.append(op)
+        cur.types[name] = rtype
+    return comps, entry
+
+
+_CALL_ATTRS = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=)%([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _while_trip(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Trip count of a canonical (0..N step 1) while: the max s32 scalar
+    constant in its condition (+transitively its fusions)."""
+    best = 0
+    seen = set()
+    stack = [cond_name]
+    while stack:
+        c = stack.pop()
+        if c in seen or c not in comps:
+            continue
+        seen.add(c)
+        for op in comps[c].ops:
+            if op.opcode == "constant" and op.result_type == "s32[]":
+                m = re.match(r"(\d+)", op.rest.strip())
+                if m:
+                    best = max(best, int(m.group(1)))
+            for m in _CALL_ATTRS.finditer(op.rest):
+                stack.append(m.group(1))
+    return max(best, 1)
+
+
+def _dot_flops(op: Op, types: Dict[str, str]) -> float:
+    res = _first_array(op.result_type)
+    if res is None:
+        return 0.0
+    _, rdims = res
+    out_elems = math.prod(rdims) if rdims else 1
+    k = 1
+    m = _CONTRACT.search(op.rest)
+    if m and op.operands:
+        lhs_t = types.get(op.operands[0])
+        arr = _first_array(lhs_t) if lhs_t else None
+        if arr:
+            _, ldims = arr
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(ldims):
+                    k *= ldims[idx]
+    return 2.0 * out_elems * k
+
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "bitcast-convert", "after-all", "partition-id",
+             "replica-id"}
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+        self._access_memo: Dict[str, List[float]] = {}
+
+    def cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self._walk(self.entry, count_bytes=True)
+
+    # ------------------------------------------------------------------
+    def _walk(self, name: str, count_bytes: bool) -> Cost:
+        key = (name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            self._memo[key] = total
+            return total
+        self._memo[key] = total  # break cycles defensively
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if oc == "dot":
+                total.flops += _dot_flops(op, comp.types)
+            if base in COLLECTIVES:
+                b = sum(_type_bytes(comp.types.get(o, ""))
+                        for o in op.operands)
+                total.coll[base] = total.coll.get(base, 0.0) + b
+            if oc == "while":
+                body = cond = None
+                m = re.search(r"condition=%([\w\.\-]+)", op.rest)
+                if m:
+                    cond = m.group(1)
+                m = re.search(r"body=%([\w\.\-]+)", op.rest)
+                if m:
+                    body = m.group(1)
+                # XLA annotates canonical loops with the trip count.
+                m = re.search(r'known_trip_count....n.:.(\d+)', op.rest)
+                if m:
+                    trip = int(m.group(1))
+                else:
+                    trip = _while_trip(self.comps, cond) if cond else 1
+                if body:
+                    total.add(self._walk(body, count_bytes), mult=trip)
+                if cond:
+                    total.add(self._walk(cond, count_bytes), mult=trip)
+                continue
+            if oc == "conditional":
+                m = _BRANCHES.search(op.rest)
+                if m:
+                    branches = re.findall(r"%([\w\.\-]+)", m.group(1))
+                    subs = [self._walk(b, count_bytes) for b in branches]
+                    if subs:   # static cost: max over branches
+                        worst = max(subs, key=lambda c: c.flops + c.hbm_bytes)
+                        total.add(worst)
+                continue
+            if oc == "fusion":
+                m = re.search(r"calls=%([\w\.\-]+)", op.rest)
+                if m:
+                    # flops from inside; bytes at the fusion boundary
+                    total.add(self._walk(m.group(1), count_bytes=False))
+                if count_bytes:
+                    total.hbm_bytes += self._op_bytes(op, comp)
+                continue
+            if oc in ("call", "custom-call", "reduce", "sort", "scatter",
+                      "map", "reduce-window", "select-and-scatter"):
+                for m in _CALL_ATTRS.finditer(op.rest):
+                    total.add(self._walk(m.group(1), count_bytes=False))
+            if count_bytes and oc not in _FREE_OPS:
+                total.hbm_bytes += self._op_bytes(op, comp)
+        return total
+
+    def _op_bytes(self, op: Op, comp: Computation) -> float:
+        """HBM traffic of one executed op.  Slicing ops move only the
+        accessed window, NOT the (possibly loop-invariant, T-sized)
+        buffer they index into; fusion operands count at the access size
+        their internal use implies."""
+        oc = op.opcode
+        res = _type_bytes(op.result_type)
+        if oc in ("dynamic-slice", "slice", "gather", "broadcast", "iota",
+                  "reshape"):
+            return float(2 * res)
+        if oc in ("dynamic-update-slice", "scatter"):
+            upd = (_type_bytes(comp.types.get(op.operands[1], ""))
+                   if len(op.operands) > 1 else res)
+            return float(2 * upd)
+        if oc == "fusion":
+            m = re.search(r"calls=%([\w\.\-]+)", op.rest)
+            if m:
+                acc = self._param_access(m.group(1))
+                b = float(res)
+                for i, o in enumerate(op.operands):
+                    full = _type_bytes(comp.types.get(o, ""))
+                    b += min(full, acc[i]) if i < len(acc) else full
+                return b
+        b = float(res)
+        for o in op.operands:
+            b += _type_bytes(comp.types.get(o, ""))
+        return b
+
+    def _param_access(self, comp_name: str) -> List[float]:
+        """Per-parameter HBM access size of a fusion computation: a
+        parameter whose only uses are the sliced operand of dynamic-slice
+        / gather counts at the slice size, else full size."""
+        if comp_name in self._access_memo:
+            return self._access_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            self._access_memo[comp_name] = []
+            return []
+        full = [float(_type_bytes(comp.types.get(p, ""))) for p in comp.params]
+        sliced: Dict[str, float] = {}
+        other_use: Dict[str, bool] = {}
+        for op in comp.ops:
+            for j, o in enumerate(op.operands):
+                if o not in comp.params:
+                    continue
+                if op.opcode in ("dynamic-slice", "gather") and j == 0:
+                    sliced[o] = sliced.get(o, 0.0) + _type_bytes(op.result_type)
+                elif op.opcode == "dynamic-update-slice" and j == 0:
+                    upd = (_type_bytes(comp.types.get(op.operands[1], ""))
+                           if len(op.operands) > 1 else 0.0)
+                    sliced[o] = sliced.get(o, 0.0) + upd
+                else:
+                    other_use[o] = True
+        out = []
+        for p, f in zip(comp.params, full):
+            if p in sliced and not other_use.get(p):
+                out.append(min(f, sliced[p]))
+            else:
+                out.append(f)
+        self._access_memo[comp_name] = out
+        return out
+
+
+def module_costs(text: str) -> Cost:
+    return HloCostModel(text).cost()

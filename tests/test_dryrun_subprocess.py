@@ -1,0 +1,35 @@
+"""Deliverable (e) in CI form: one real dry-run cell compiles for the
+production 256-chip mesh in a subprocess (the 512 placeholder devices
+require a fresh process — jax pins the device count at first init)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.timeout(600)
+def test_dryrun_cell_compiles_on_production_mesh(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-base", "--shape", "decode_32k",
+         "--mesh", "single", "--force"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    path = os.path.join(REPO, "results", "dryrun",
+                        "whisper-base__decode_32k__pod16x16.json")
+    with open(path) as f:
+        rec = json.load(f)
+    assert rec["status"] == "ok"
+    rl = rec["roofline"]
+    assert rl["n_chips"] == 256
+    assert rl["hlo_flops"] > 0 and rl["hlo_bytes"] > 0
+    assert rl["bottleneck"] in ("compute", "memory", "collective")
+    # the serve rules must have been selected for a decode cell
+    assert rec["rules"] == "serve"
+    # memory_analysis printed per-device stats
+    assert rec["memory"]["total_hbm_bytes"] > 0

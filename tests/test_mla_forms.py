@@ -1,0 +1,82 @@
+"""MLA: the naive (train/prefill, T>=1024) and absorbed (decode/dense)
+forms must agree — they are algebraically identical attention."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MLACfg
+from repro.models import mla as MLA
+
+
+def _cfg():
+    return ArchConfig(
+        name="mla-test", family="moe", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab=128, d_head=8,
+        mla=MLACfg(q_lora=16, kv_lora=16, d_nope=8, d_rope=4, d_v=8))
+
+
+def test_naive_flash_matches_absorbed_dense():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    p, _ = MLA.mla_params(key, cfg, n_layers=1)
+    pl = jax.tree.map(lambda a: a[0], p)
+    B, T = 2, 1024        # T >= 1024 -> naive flash path
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model),
+                          jnp.float32)
+    out_naive, _ = MLA.mla_attention(pl, x, cfg)
+
+    # absorbed dense oracle: chunk x so T < 1024 never triggers flash,
+    # but causality couples chunks — instead run the absorbed path by
+    # monkeypatching the threshold via a cache of exactly T (dense
+    # branch handles cache path for any T below the flash threshold).
+    # Simplest exact check: recompute with the absorbed equations here.
+    from repro.models.common import make_causal_mask, rms_norm, rope
+    import math
+    m, H = cfg.mla, cfg.n_heads
+    cdt = x.dtype
+    q = rms_norm(x @ pl["wq_a"], pl["q_norm"]) @ pl["wq_b"]
+    q_nope, q_rope = MLA._split_q(q, H, m)
+    kv = x @ pl["wkv_a"]
+    c_kv, k_rope = kv[..., :m.kv_lora], kv[..., m.kv_lora:]
+    c_kv = rms_norm(c_kv, pl["kv_norm"])
+    positions = jnp.arange(T)[None, :]
+    q_rope = rope(q_rope, positions, cfg.rope_base)
+    k_rope_r = rope(k_rope[..., None, :], positions, cfg.rope_base)[..., 0, :]
+    wk_b = pl["wk_b"].reshape(m.kv_lora, H, m.d_nope)
+    q_abs = jnp.einsum("bthd,chd->bthc", q_nope, wk_b)
+    scale = 1.0 / math.sqrt(m.d_nope + m.d_rope)
+    s = (jnp.einsum("bthc,bsc->bhts", q_abs, c_kv)
+         + jnp.einsum("bthr,bsr->bhts", q_rope, k_rope_r)) * scale
+    mask = make_causal_mask(T, T, 0)
+    s = jnp.where(mask[None, None], s.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(s, -1).astype(cdt)
+    o_lat = jnp.einsum("bhts,bsc->bthc", probs, c_kv)
+    wv_b = pl["wv_b"].reshape(m.kv_lora, H, m.d_v)
+    o = jnp.einsum("bthc,chv->bthv", o_lat, wv_b)
+    want = o.reshape(B, T, H * m.d_v) @ pl["wo"]
+
+    np.testing.assert_allclose(np.asarray(out_naive), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_consistent_with_prefill():
+    """Absorbed decode continues exactly where dense prefill stopped."""
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    p, _ = MLA.mla_params(key, cfg, n_layers=1)
+    pl = jax.tree.map(lambda a: a[0], p)
+    B, T = 1, 12
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, T + 1, cfg.d_model),
+                          jnp.float32)
+    # full forward over T+1 tokens
+    full, _ = MLA.mla_attention(pl, x, cfg)
+    # prefill T then decode 1
+    cache = {"ckv": jnp.zeros((B, 64, cfg.mla.kv_lora + cfg.mla.d_rope),
+                              jnp.float32),
+             "pos": jnp.zeros((B,), jnp.int32)}
+    _, cache = MLA.mla_attention(pl, x[:, :T], cfg, cache=cache)
+    dec, _ = MLA.mla_attention(pl, x[:, T:], cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, T]), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: REDUCED config, one forward + prefill +
+decode step on CPU; assert output shapes and finiteness (assignment
+requirement (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models import build
+
+ARCHS = sorted(all_configs().keys())
+B, S = 2, 16
+
+
+def _batch(cfg, kind):
+    rng = np.random.default_rng(0)
+    d = {}
+    if kind == "train":
+        d["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        d["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        d["mask"] = jnp.ones((B, S), jnp.float32)
+    elif kind == "prefill":
+        d["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    else:
+        d["token"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32)
+        d["pos"] = jnp.full((B,), S, jnp.int32)
+    if kind != "decode":
+        if cfg.encdec is not None:
+            d["frames"] = jnp.asarray(
+                rng.normal(size=(B, cfg.encdec.n_frames, cfg.d_model)),
+                jnp.float32)
+        if cfg.vision is not None:
+            d["image_embeds"] = jnp.asarray(
+                rng.normal(size=(B, cfg.vision.n_image_tokens, cfg.vision.d_vision)),
+                jnp.float32)
+    return d
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for name in ARCHS:
+        cfg = all_configs()[name].reduced()
+        m = build(cfg, compute_dtype=jnp.float32)
+        params, specs = m.init(jax.random.key(0))
+        out[name] = (cfg, m, params, specs)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(built, arch):
+    cfg, m, params, specs = built[arch]
+    logits, aux = m.forward(params, _batch(cfg, "train"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: NaN/Inf logits"
+    assert np.isfinite(float(aux["aux_loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_mirror_params(built, arch):
+    """Every param leaf must carry a logical-axes tuple of equal rank."""
+    cfg, m, params, specs = built[arch]
+    pl = jax.tree.leaves(params)
+    sl = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(pl) == len(sl)
+    for a, s in zip(pl, sl):
+        assert isinstance(s, tuple) and len(s) == a.ndim, (s, a.shape)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_consistent_with_forward(built, arch):
+    """Decode after prefill must equal slicing the full forward: the KV /
+    recurrent caches are exact, not approximations."""
+    cfg, m, params, specs = built[arch]
+    batch = _batch(cfg, "prefill")
+    cache = m.init_cache(B, T_max=S + 8)
+    logits_pre, cache = m.prefill(params, batch, cache)
+    assert logits_pre.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits_pre)).all()
+
+    # decode one token; compare against forward on the extended sequence
+    rng = np.random.default_rng(1)
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32)
+    dbatch = {"token": nxt, "pos": jnp.full((B,), S, jnp.int32)}
+    logits_dec, cache = m.decode(params, dbatch, cache)
+    assert logits_dec.shape == (B, 1, cfg.vocab)
+
+    fb = dict(batch)
+    fb["tokens"] = jnp.concatenate([batch["tokens"], nxt], axis=1)
+    logits_full, _ = m.forward(params, fb)
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "xlstm-125m"])
+def test_subquadratic_cache_is_constant_size(built, arch):
+    """long_500k eligibility: cache size must not grow with T_max."""
+    cfg, m, params, specs = built[arch]
+    c1 = m.init_cache(B, T_max=64)
+    c2 = m.init_cache(B, T_max=4096)
+    s1 = sum(np.prod(a.shape) for a in jax.tree.leaves(c1))
+    s2 = sum(np.prod(a.shape) for a in jax.tree.leaves(c2))
+    assert s1 == s2
+
+
+def test_long_500k_support_flags():
+    cfgs = all_configs()
+    runnable = {n for n, c in cfgs.items() if c.supports_shape("long_500k")[0]}
+    assert runnable == {"recurrentgemma-2b", "xlstm-125m"}

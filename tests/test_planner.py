@@ -1,0 +1,212 @@
+"""Planner tests: Eqns (1)-(4), pattern classification, plan cache —
+validated against the paper's own benchmark scenarios (§5.1, Table 3)."""
+import numpy as np
+import pytest
+
+from repro.core import (AccessSpec, AbsoluteSpec, Box, CommKind,
+                        HDArrayRuntime, IDENTITY_2D, ROW_ALL, COL_ALL,
+                        SectionSet, stencil, trapezoid)
+
+
+def mk_rt(nproc=4):
+    return HDArrayRuntime(nproc)
+
+
+def test_gemm_allgather_detection_and_volume():
+    """Paper §5.1: 'The HDArray runtime system detects and generates
+    all-gather collective communication' for GEMM; Table 3 volume."""
+    n, P = 32, 4
+    rt = mk_rt(P)
+    part = rt.partition_row((n, n))
+    hA, hB, hC = (rt.create(s, (n, n)) for s in "abc")
+    for h in (hA, hB, hC):
+        rt.write(h, np.zeros((n, n), np.float32), part)
+    plan = rt.plan_only("gemm", part, [hA, hB, hC],
+                        uses={"a": ROW_ALL, "b": COL_ALL},
+                        defs={"c": IDENTITY_2D})
+    pb = plan.plan_for("b")
+    assert pb.kind == CommKind.ALL_GATHER
+    # all-gather volume: each of P procs sends its (n/P) rows to P-1 peers
+    expected = P * (P - 1) * (n // P) * n * 4
+    assert pb.bytes_total == expected
+    # A accessed row-wise on a row partition: no comm
+    assert plan.plan_for("a").kind == CommKind.NONE
+    # 100 repeated calls: B's gather happens ONCE (GDEF emptied)
+    total = plan.bytes_total
+    for _ in range(100):
+        p = rt.plan_only("gemm", part, [hA, hB, hC],
+                         uses={"a": ROW_ALL, "b": COL_ALL},
+                         defs={"c": IDENTITY_2D})
+        total += p.bytes_total
+    assert total == expected  # paper: 'once for the array B'
+
+
+def test_2mm_row_vs_col_partitioning():
+    """Paper Fig. 5 / Table 3: 2MM row partition re-gathers D every
+    iteration; col partition communicates only twice (A and C)."""
+    n, P, iters = 32, 4, 10
+
+    def run(ptype):
+        rt = mk_rt(P)
+        part = (rt.partition_row if ptype == "row" else rt.partition_col)((n, n))
+        names = ["a", "b", "c", "d", "e"]
+        hs = {s: rt.create(s, (n, n)) for s in names}
+        for h in hs.values():
+            rt.write(h, np.zeros((n, n), np.float32), part)
+        total = 0
+        for _ in range(iters):
+            p1 = rt.plan_only("mm1", part, [hs["a"], hs["b"], hs["d"]],
+                              uses={"a": ROW_ALL, "b": COL_ALL},
+                              defs={"d": IDENTITY_2D})
+            p2 = rt.plan_only("mm2", part, [hs["c"], hs["d"], hs["e"]],
+                              uses={"c": ROW_ALL, "d": COL_ALL},
+                              defs={"e": IDENTITY_2D})
+            total += p1.bytes_total + p2.bytes_total
+        return total
+
+    chunk = (n // P) * n * 4 * P * (P - 1)   # one full all-gather
+    row_total = run("row")
+    col_total = run("col")
+    # ROW: B gathered once + D gathered EVERY iteration
+    assert row_total == chunk * (1 + iters)
+    # COL: A and C gathered once each, D never (defined where used)
+    assert col_total == 2 * chunk
+    assert col_total < row_total
+
+
+def test_jacobi_halo_detection_and_steady_state():
+    """Paper §5.1 Jacobi: 4-pt stencil => point-to-point halo exchange,
+    repeated every iteration (data dependency), cache hits after warmup."""
+    n, P = 40, 4
+    rt = mk_rt(P)
+    interior = Box.make((1, n - 1), (1, n - 1))
+    part_work = rt.partition_row((n, n), region=interior)
+    part_data = rt.partition_row((n, n))
+    hA, hB = rt.create("A", (n, n)), rt.create("B", (n, n))
+    rt.write(hA, np.zeros((n, n), np.float32), part_data)
+    rt.write(hB, np.zeros((n, n), np.float32), part_data)
+    four_pt = AccessSpec.of((0, -1), (0, 1), (-1, 0), (1, 0))
+    vols = []
+    for _ in range(5):
+        p1 = rt.plan_only("jac1", part_work, [hA, hB],
+                          uses={"B": four_pt}, defs={"A": IDENTITY_2D})
+        p2 = rt.plan_only("jac2", part_work, [hA, hB],
+                          uses={"A": IDENTITY_2D}, defs={"B": IDENTITY_2D})
+        vols.append((p1.bytes_total, p2.bytes_total))
+        if p1.bytes_total:
+            assert p1.plan_for("B").kind == CommKind.HALO
+    # kernel2 (zero offsets) never communicates
+    assert all(v2 == 0 for _, v2 in vols)
+    # steady state: same halo volume every iteration (data dependency)
+    assert vols[2][0] == vols[3][0] == vols[4][0] > 0
+    # plan cache engaged (history or state-compare hits)
+    assert rt.planner.stats.plans_cached > 0
+
+
+def test_convolution_no_dependency_communicates_once():
+    """Paper §5.1/Table 3: Convolution (no inter-iteration dependency) has
+    tiny total comm — the halo moves once, then GDEF is empty."""
+    n, P = 40, 4
+    rt = mk_rt(P)
+    part = rt.partition_row((n, n))
+    hA, hB = rt.create("A", (n, n)), rt.create("B", (n, n))
+    rt.write(hA, np.zeros((n, n), np.float32), part)
+    rt.write(hB, np.zeros((n, n), np.float32), part)
+    nine_pt = stencil(2, radius=1, diagonal=True)
+    totals = []
+    for _ in range(5):
+        p = rt.plan_only("conv", part, [hA, hB],
+                         uses={"A": nine_pt}, defs={"B": IDENTITY_2D})
+        totals.append(p.bytes_total)
+    assert totals[0] > 0
+    assert all(t == 0 for t in totals[1:])  # 'communication only first iter'
+
+
+def test_absolute_trapezoid_sections():
+    """Covariance/Correlation §5.1: kernel1 defines the upper triangle
+    (trapezoid per device); the symmetrization kernel reads the
+    TRANSPOSE of sections other devices defined -> point-to-point comm
+    derived from absolute sections (use@/def@ interface)."""
+    from repro.core.partition import _even_splits
+    from repro.core.sections import Box, SectionSet
+
+    n, P = 16, 4
+    rt = mk_rt(P)
+    part = rt.partition_row((n, n))
+    hS = rt.create("sym", (n, n))
+    rt.write(hS, np.zeros((n, n), np.float32), part)
+    tri = AbsoluteSpec(trapezoid(P, n, upper=True))
+    p1 = rt.plan_only("corr_upper", part, [hS], uses={"sym": tri},
+                      defs={"sym": tri})
+    assert p1.bytes_total == 0  # row owners define their own trapezoids
+
+    # symmetrize: device p (rows [lo,hi)) writes C[i][j]=C[j][i] for j<i,
+    # i.e. READS upper-tri columns [lo,hi): rows [0,i), col i
+    rows = _even_splits(n, P)
+    use_secs, def_secs = [], []
+    for lo, hi in rows:
+        u = SectionSet.of(*[Box.make((0, i), (i, i + 1)) for i in range(lo, hi)
+                            if i > 0])
+        d = SectionSet.of(*[Box.make((i, i + 1), (0, i)) for i in range(lo, hi)
+                            if i > 0])
+        use_secs.append(u)
+        def_secs.append(d)
+    p2 = rt.plan_only("corr_symm", part, [hS],
+                      uses={"sym": AbsoluteSpec(tuple(use_secs))},
+                      defs={"sym": AbsoluteSpec(tuple(def_secs))})
+    # reads cross row-block boundaries -> genuine comm, irregular p2p
+    assert p2.bytes_total > 0
+    assert p2.plan_for("sym").kind == CommKind.P2P
+    # traffic only flows from lower ranks (earlier rows) to higher ranks
+    for (src, dst), m in p2.plan_for("sym").messages.items():
+        if not m.is_empty():
+            assert src < dst
+
+
+def test_repartition_migration():
+    """Paper contribution 3: repartition at any point; planner derives
+    the migration traffic."""
+    n, P = 16, 4
+    rt = mk_rt(P)
+    row = rt.partition_row((n, n))
+    col = rt.partition_col((n, n))
+    h = rt.create("x", (n, n))
+    data = np.arange(n * n, dtype=np.float32).reshape(n, n)
+    rt.write(h, data, row)
+    plan = rt.repartition(h, row, col)
+    # row->col migration: each device keeps its diagonal block
+    kept = (n // P) * (n // P) * 4
+    moved_per_dev = (n // P) * n * 4 - kept
+    assert plan.bytes_total == P * moved_per_dev
+    assert np.array_equal(rt.read(h, col), data)
+
+
+def test_write_replicated_then_no_comm():
+    n, P = 8, 4
+    rt = mk_rt(P)
+    part = rt.partition_row((n, n))
+    h = rt.create("w", (n, n))
+    rt.write_replicated(h, np.ones((n, n), np.float32))
+    plan = rt.plan_only("use_w", part, [h], uses={"w": ROW_ALL}, defs={})
+    assert plan.bytes_total == 0
+
+
+def test_planner_stats_overhead_reduction():
+    """Fig. 6/7 mechanism: repeated calls stop doing set algebra."""
+    n, P = 32, 8
+    rt = mk_rt(P)
+    part = rt.partition_row((n, n))
+    hA, hB = rt.create("A", (n, n)), rt.create("B", (n, n))
+    rt.write(hA, np.zeros((n, n), np.float32), part)
+    rt.write(hB, np.zeros((n, n), np.float32), part)
+    four_pt = AccessSpec.of((0, -1), (0, 1), (-1, 0), (1, 0))
+    for _ in range(20):
+        rt.plan_only("jac", part, [hB, hA],
+                     uses={"B": four_pt}, defs={"A": IDENTITY_2D})
+        rt.plan_only("copy", part, [hA, hB],
+                     uses={"A": IDENTITY_2D}, defs={"B": IDENTITY_2D})
+    s = rt.planner.stats
+    assert s.plans_cached >= 30           # nearly everything reused
+    assert s.plans_computed <= 8          # only warmup replans
+    # step-1 history hits engage after one verified fixpoint
+    assert s.hits_history > 0

@@ -1,0 +1,104 @@
+"""Unit + property tests for the N-d section algebra (GDEF substrate)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sections import (Box, SectionSet, mask_from_section_set,
+                                 section_set_from_mask)
+
+
+def test_box_basic():
+    b = Box.make((0, 4), (2, 6))
+    assert b.volume() == 16
+    assert b.shape() == (4, 4)
+    assert not b.is_empty()
+    assert Box.make((3, 3), (0, 5)).is_empty()
+
+
+def test_box_intersect_subtract():
+    a = Box.make((0, 10), (0, 10))
+    b = Box.make((5, 15), (5, 15))
+    i = a.intersect(b)
+    assert i == Box.make((5, 10), (5, 10))
+    parts = a.subtract(b)
+    assert sum(p.volume() for p in parts) == 100 - 25
+    # disjointness
+    for x in parts:
+        for y in parts:
+            if x is not y:
+                assert not x.overlaps(y)
+        assert not x.overlaps(i)
+
+
+def test_sectionset_union_disjoint_invariant():
+    s = SectionSet.of(Box.make((0, 5)), Box.make((3, 8)))
+    assert s.volume() == 8  # overlap collapsed
+    t = s.union(SectionSet.of(Box.make((8, 10))))
+    assert t.volume() == 10
+    # merged into a single canonical box
+    assert len(t.boxes) == 1 and t.boxes[0] == Box.make((0, 10))
+
+
+def test_sectionset_subtract_intersect():
+    full = SectionSet.full((10, 10))
+    hole = SectionSet.of(Box.make((2, 4), (2, 4)))
+    rem = full.subtract(hole)
+    assert rem.volume() == 96
+    assert rem.intersect(hole).is_empty()
+    assert rem.union(hole) == full
+
+
+# ---------------- property tests vs dense-mask oracle -----------------
+boxes_1d = st.tuples(st.integers(0, 8), st.integers(0, 8)).map(
+    lambda t: Box.make((min(t), max(t))))
+boxes_2d = st.tuples(st.integers(0, 6), st.integers(0, 6),
+                     st.integers(0, 6), st.integers(0, 6)).map(
+    lambda t: Box.make((min(t[0], t[1]), max(t[0], t[1])),
+                       (min(t[2], t[3]), max(t[2], t[3]))))
+
+
+def _mask(s, shape):
+    return mask_from_section_set(s, shape)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(boxes_2d, max_size=4), st.lists(boxes_2d, max_size=4))
+def test_prop_union_intersect_subtract_match_oracle(bs_a, bs_b):
+    shape = (6, 6)
+    A = SectionSet.of(*bs_a)
+    B = SectionSet.of(*bs_b)
+    ma, mb = _mask(A, shape), _mask(B, shape)
+    assert np.array_equal(_mask(A.union(B), shape), ma | mb)
+    assert np.array_equal(_mask(A.intersect(B), shape), ma & mb)
+    assert np.array_equal(_mask(A.subtract(B), shape), ma & ~mb)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(boxes_2d, max_size=4))
+def test_prop_disjoint_and_canonical(bs):
+    A = SectionSet.of(*bs)
+    # pairwise disjoint
+    for i, x in enumerate(A.boxes):
+        for y in A.boxes[i + 1:]:
+            assert not x.overlaps(y)
+    # sorted canonical order => equality is structural
+    assert tuple(sorted(A.boxes)) == A.boxes
+    # volume matches the mask oracle
+    assert A.volume() == _mask(A, (6, 6)).sum()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(boxes_2d, max_size=3), st.lists(boxes_2d, max_size=3))
+def test_prop_canonical_equality(bs_a, bs_b):
+    """Same point set => equal SectionSet regardless of construction
+    order (the property the paper's linear GDEF compare relies on)."""
+    A = SectionSet.of(*bs_a).union(SectionSet.of(*bs_b))
+    B = SectionSet.of(*bs_b).union(SectionSet.of(*bs_a))
+    assert np.array_equal(_mask(A, (6, 6)), _mask(B, (6, 6)))
+    assert A == B
+
+
+def test_translate_clamp():
+    s = SectionSet.of(Box.make((0, 4), (0, 4)))
+    t = s.translate((-2, 1)).clamp((4, 4))
+    assert t == SectionSet.of(Box.make((0, 2), (1, 4)))

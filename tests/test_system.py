@@ -1,0 +1,188 @@
+"""System-level integration tests: training loop + checkpoint/restore +
+fault tolerance + data determinism + optimizer + serving engine +
+roofline cost walker."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.ft.faults import plan_elastic_rescale
+from repro.launch.train import setup, train
+from repro.optim import adamw
+
+
+# ----------------------------------------------------------------------
+# end-to-end training
+# ----------------------------------------------------------------------
+def test_train_loss_decreases_and_recovers_from_fault():
+    with tempfile.TemporaryDirectory() as d:
+        run = setup("deepseek-7b", reduced=True, seq_len=32, global_batch=4,
+                    lr=5e-3, ckpt_dir=d, total_steps=40)
+        out = train(run, 40, ckpt_every=10, inject_faults=[20],
+                    verbose=False)
+        assert out["recoveries"], "injected fault must trigger restore"
+        first = np.mean(out["losses"][:5])
+        last = np.mean(out["losses"][-5:])
+        assert np.isfinite(out["losses"]).all()
+        assert last < first, (first, last)
+
+
+def test_resume_reproduces_interrupted_run():
+    """Determinism: train 20 straight == train 10, stop, resume to 20."""
+    kw = dict(reduced=True, seq_len=16, global_batch=4, lr=1e-3,
+              total_steps=20)
+    run_a = setup("yi-9b", **kw)
+    out_a = train(run_a, 20, verbose=False)
+    with tempfile.TemporaryDirectory() as d:
+        run_b = setup("yi-9b", ckpt_dir=d, **kw)
+        train(run_b, 10, ckpt_every=5, verbose=False)
+        run_c = setup("yi-9b", ckpt_dir=d, **kw)
+        out_c = train(run_c, 20, ckpt_every=5, verbose=False)
+    np.testing.assert_allclose(out_a["losses"][-1], out_c["losses"][-1],
+                               rtol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# checkpoint manager
+# ----------------------------------------------------------------------
+def test_ckpt_atomic_keep_k_and_restore():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2)
+        state = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+        for s in (1, 2, 3):
+            cm.save(s, jax.tree.map(lambda x: x * s, state))
+        assert cm.list_steps() == [2, 3]          # keep-k rotation
+        step, got = cm.restore(None, state)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(got["a"]),
+                                      np.asarray(state["a"]) * 3)
+        # a stale tmp dir must never be restored
+        os.makedirs(os.path.join(d, "step_00000009.tmp"), exist_ok=True)
+        assert cm.latest_step() == 3
+
+
+def test_ckpt_async_save():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=3)
+        cm.save_async(5, {"w": jnp.zeros(8)})
+        cm.wait()
+        assert cm.list_steps() == [5]
+
+
+# ----------------------------------------------------------------------
+# data pipeline
+# ----------------------------------------------------------------------
+def test_pipeline_deterministic_and_sharded():
+    cfg = DataConfig(vocab=97, seq_len=12, global_batch=8, seed=3)
+    p = TokenPipeline(cfg)
+    b1, b2 = p.batch_at(7), p.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p.batch_at(8)["tokens"], b1["tokens"])
+    # host slices tile the global batch exactly
+    parts = [p.host_batch_slice(7, h, 4)["tokens"] for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), b1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+# ----------------------------------------------------------------------
+# optimizer
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("moment_dtype", ["fp32", "bf16", "int8"])
+def test_adamw_converges_quadratic(moment_dtype):
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                            total_steps=60, schedule="const",
+                            moment_dtype=moment_dtype)
+    params = {"w": jnp.asarray([4.0, -3.0, 2.0])}
+    state = adamw.init_opt_state(cfg, params)
+    grad = jax.grad(lambda p: jnp.sum(p["w"] ** 2))
+    for _ in range(60):
+        params, state, _ = adamw.apply_updates(cfg, params, grad(params),
+                                               state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+
+def test_grad_compression_roundtrip():
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .standard_normal((64,)).astype(np.float32))}
+    c = adamw.compress_grads(g, "bf16")
+    d = adamw.decompress_grads(c, "bf16")
+    np.testing.assert_allclose(np.asarray(d["w"]), np.asarray(g["w"]),
+                               atol=1e-2)
+    c8 = adamw.compress_grads(g, "int8", jax.random.PRNGKey(0))
+    d8 = adamw.decompress_grads(c8, "int8")
+    np.testing.assert_allclose(np.asarray(d8["w"]), np.asarray(g["w"]),
+                               atol=0.05)
+
+
+# ----------------------------------------------------------------------
+# elasticity
+# ----------------------------------------------------------------------
+def test_elastic_rescale_plan():
+    plan = plan_elastic_rescale(n_params=1 << 20, itemsize=4,
+                                old_devices=8, new_devices=6, model_axis=2)
+    assert plan.new_mesh_shape == (3, 2)
+    assert plan.migration_bytes > 0           # some rows must move
+    # rescaling to the same count moves nothing
+    plan2 = plan_elastic_rescale(n_params=1 << 20, itemsize=4,
+                                 old_devices=8, new_devices=8, model_axis=2)
+    assert plan2.migration_bytes == 0
+
+
+# ----------------------------------------------------------------------
+# roofline cost walker (exactness on a closed-form program)
+# ----------------------------------------------------------------------
+def test_hlo_walker_counts_scan_trips():
+    from repro.roofline.hlo_costs import module_costs
+
+    def step(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return jnp.sum(y)
+
+    w = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    c = jax.jit(jax.grad(step)).lower(w, x).compile()
+    cost = module_costs(c.as_text())
+    expect = 5 * 2 * 8 * 64 * 64 * 3        # fwd + 2 bwd matmuls per layer
+    assert abs(cost.flops - expect) / expect < 0.05
+    ca = c.cost_analysis()
+    assert cost.flops > 2 * float(ca.get("flops", 0)), \
+        "walker must exceed XLA's trip-uncounted flops"
+
+
+def test_fused_ce_matches_unfused():
+    """§Perf it. 8: the chunked head+CE path must equal the standard
+    forward + cross_entropy_loss."""
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.train.step import TrainConfig, make_loss_fn
+
+    cfg = get_config("gemma2-9b").reduced()   # softcap exercises that path
+    bundle = build(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S = 2, 24
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "mask": jnp.asarray(rng.random((B, S)) > 0.2, jnp.float32),
+    }
+    # call forward_fused directly (the loss-fn vocab gate would route a
+    # reduced 256-vocab config to the unfused path)
+    l_fused, _ = bundle.forward_fused(params, batch)
+    l_plain, _ = make_loss_fn(bundle, TrainConfig(fused_ce=False))(params, batch)
+    np.testing.assert_allclose(float(l_fused), float(l_plain), rtol=2e-5)
+
+    g1 = jax.grad(lambda p: bundle.forward_fused(p, batch)[0])(params)
+    g2 = jax.grad(lambda p: make_loss_fn(
+        bundle, TrainConfig(fused_ce=False))(p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-4)

@@ -1,0 +1,23 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re
+from tools.diag_cell_lib import build_cell_compiled
+from repro.roofline import hlo_costs as H
+
+c = build_cell_compiled(sys.argv[1], sys.argv[2])
+model = H.HloCostModel(c.as_text())
+best = (0, None, None)
+for name, comp in model.comps.items():
+    for op in comp.ops:
+        base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+        if base == "all-reduce":
+            b = sum(H._type_bytes(comp.types.get(o,"")) for o in op.operands)
+            if b > best[0]:
+                best = (b, op, comp.name)
+b, op, cname = best
+print("computation:", cname)
+print("bytes(one exec):", f"{b:.3e}")
+print("result type:", op.result_type[:2000])
+m = re.search(r'op_name="([^"]+)"', op.rest)
+print("op_name:", m.group(1) if m else "?")
+print("operands:", op.operands[:20])

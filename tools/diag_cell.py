@@ -1,0 +1,63 @@
+"""Rebuild one dry-run cell and print flops/bytes/coll attribution."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re, json
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch import dryrun as DR
+from repro.launch.mesh import make_production_mesh
+from repro.configs import get_config, SHAPES
+from repro.models import build
+from repro.optim import adamw
+from repro.train import sharding as SH
+from repro.train.step import TrainConfig, make_train_step
+from repro.roofline.attribute import costs_by_tag, top
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+cfg = get_config(arch)
+shape_cell = SHAPES[shape_name]
+mesh = make_production_mesh(multi_pod=multi)
+rules = SH.baseline_rules(multi)
+bundle = build(cfg)
+params_shape, specs = DR.shapes_and_specs(bundle)
+batch = cfg.input_specs(shape_name)
+ov = dict(DR.TRAIN_OVERRIDES.get(arch, {}))
+tcfg, moment = DR._split_overrides(ov)
+import dataclasses
+n_batch = 1
+for a in rules.batch_axes: n_batch *= mesh.shape.get(a, 1)
+mb = tcfg.microbatches
+while mb > 1 and (shape_cell.global_batch // mb) % n_batch: mb //= 2
+tcfg = dataclasses.replace(tcfg, microbatches=mb)
+
+with mesh, jax.sharding.set_mesh(mesh):
+    if shape_cell.kind == "train":
+        if tcfg.param_dtype == "bf16":
+            params_shape = DR._cast_shapes(params_shape, jax.numpy.bfloat16)
+        param_sh = SH.param_shardings(specs, params_shape, mesh, rules)
+        ocfg = adamw.AdamWConfig(moment_dtype=moment)
+        opt_shape = jax.eval_shape(lambda p: adamw.init_opt_state(ocfg, p), params_shape)
+        opt_sh = adamw.OptState(step=NamedSharding(mesh, P()), mu=param_sh, nu=param_sh)
+        step = make_train_step(bundle, ocfg, tcfg)
+        c = jax.jit(step, in_shardings=(param_sh, opt_sh, SH.batch_shardings(batch, mesh, rules)),
+                    out_shardings=(param_sh, opt_sh, NamedSharding(mesh, P())),
+                    donate_argnums=(0,1)).lower(params_shape, opt_shape, batch).compile()
+    else:
+        params_shape = DR._cast_shapes(params_shape, jax.numpy.bfloat16)
+        param_sh = SH.param_shardings(specs, params_shape, mesh, rules)
+        cache_shape = jax.eval_shape(lambda: bundle.init_cache(shape_cell.global_batch, shape_cell.seq_len))
+        cache_sh = SH.cache_shardings(cache_shape, mesh, rules)
+        fn = bundle.prefill if shape_cell.kind == "prefill" else bundle.decode
+        c = jax.jit(fn, in_shardings=(param_sh, SH.batch_shardings(batch, mesh, rules), cache_sh),
+                    out_shardings=(NamedSharding(mesh, P()), cache_sh),
+                    donate_argnums=(2,)).lower(params_shape, batch, cache_shape).compile()
+try:
+    ma = c.memory_analysis()
+    print(f"temp/dev: {ma.temp_size_in_bytes/2**30:.1f} GiB  args: {ma.argument_size_in_bytes/2**30:.1f} GiB")
+except Exception as e:
+    print("mem analysis:", e)
+f, b, coll = costs_by_tag(c.as_text(), depth=3)
+print("== FLOPS =="); print(top(f))
+print("== HBM BYTES =="); print(top(b))
+print("== COLLECTIVE BYTES =="); print(top(coll))

@@ -1,0 +1,38 @@
+"""Closing hillclimb experiments: flash block sizes + accum dtype on qwen3 train."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import repro.kernels.flash_attention.ops as FO
+import repro.kernels.flash_attention.jnp_impl as JI
+from repro.roofline import hlo_costs as H
+from repro.roofline.analysis import PEAK_FLOPS, HBM_BW, ICI_BW
+
+def measure(tag, **over):
+    from tools.diag_cell_lib import build_cell_compiled
+    c = build_cell_compiled("qwen3-moe-30b-a3b", "train_4k", overrides=over or None)
+    cost = H.module_costs(c.as_text())
+    tm = cost.hbm_bytes / HBM_BW; tc = cost.flops / PEAK_FLOPS; tl = cost.coll_bytes / ICI_BW
+    print(f"{tag:28s} t_c {tc:6.2f}  t_m {tm:6.2f}  t_coll {tl:6.2f}", flush=True)
+    return tm
+
+base = measure("baseline (bq512,bk1024)")
+
+# experiment A: bigger flash blocks
+_orig = FO.flash_attention
+def fa_big(*a, **kw):
+    kw.setdefault("block_q", 1024); kw["block_q"]=1024; kw["block_kv"]=2048
+    return _orig(*a, **{k:v for k,v in kw.items()})
+import repro.models.layers as LY
+import repro.models.mla as MLA
+LY.flash_attention = fa_big
+tm_a = measure("A: flash blocks 1024/2048")
+LY.flash_attention = _orig
+
+# experiment B: bf16 grad accumulate
+tm_b = measure("B: accum bf16", accum_dtype="bf16")
+
+# experiment C: moment dtype bf16
+tm_c = measure("C: moments bf16", moment_dtype="bf16")
+
+for name, tm in (("A blocks", tm_a), ("B accum", tm_b), ("C moments", tm_c)):
+    print(f"{name}: dominant-term delta {100*(base-tm)/base:+.1f}%")

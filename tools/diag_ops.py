@@ -1,0 +1,42 @@
+"""Print the largest individual collective ops + largest unnamed fusions with shapes/trips."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re
+from tools.diag_cell_lib import build_cell_compiled
+from repro.roofline import hlo_costs as H
+
+c = build_cell_compiled(sys.argv[1], sys.argv[2])
+model = H.HloCostModel(c.as_text())
+rows = []
+fus = []
+
+def walk(name, mult):
+    comp = model.comps.get(name)
+    if comp is None: return
+    for op in comp.ops:
+        if op.opcode == "while":
+            mt = re.search(r'known_trip_count....n.:.(\d+)', op.rest)
+            trip = int(mt.group(1)) if mt else 1
+            mb = re.search(r"body=%([\w\.\-]+)", op.rest)
+            if mb: walk(mb.group(1), mult*trip)
+            continue
+        base = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+        if base in H.COLLECTIVES:
+            b = sum(H._type_bytes(comp.types.get(o,"")) for o in op.operands)
+            m = re.search(r'op_name="([^"]+)"', op.rest)
+            rows.append((b*mult, mult, base, op.result_type[:60], (m.group(1) if m else "?")[-70:]))
+        if op.opcode == "fusion":
+            b = model._op_bytes(op, comp)*mult
+            m = re.search(r'op_name="([^"]+)"', op.rest)
+            fus.append((b, mult, op.result_type[:50], (m.group(1) if m else "UNNAMED")[-60:]))
+            continue
+        for mm in H._CALL_ATTRS.finditer(op.rest):
+            walk(mm.group(1), mult)
+
+walk(model.entry, 1.0)
+print("== TOP COLLECTIVE OPS ==")
+for b, mult, kind, rt, nm in sorted(rows, key=lambda r: -r[0])[:10]:
+    print(f"  {b:.3e} x{mult:>5.0f} {kind:18s} {rt}  {nm}")
+print("== TOP FUSION BYTES ==")
+for b, mult, rt, nm in sorted(fus, key=lambda r: -r[0])[:10]:
+    print(f"  {b:.3e} x{mult:>5.0f} {rt}  {nm}")

@@ -1,0 +1,38 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re
+import jax
+from tools.diag_cell_lib import build_cell_compiled
+from repro.roofline import hlo_costs as H
+from collections import defaultdict
+
+c = build_cell_compiled(sys.argv[1], sys.argv[2], multi=False)
+model = H.HloCostModel(c.as_text())
+by = defaultdict(float)
+
+def walk(name, mult):
+    comp = model.comps.get(name)
+    if comp is None: return
+    for op in comp.ops:
+        if op.opcode == "while":
+            mt = re.search(r'known_trip_count....n.:.(\d+)', op.rest)
+            trip = int(mt.group(1)) if mt else 1
+            mb = re.search(r"body=%([\w\.\-]+)", op.rest)
+            if mb: walk(mb.group(1), mult*trip)
+            continue
+        if op.opcode == "dot":
+            m = re.search(r'op_name="([^"]+)"', op.rest)
+            key = (m.group(1).split("/")[-1] if m else "UNNAMED") + " " + op.result_type[:44]
+            if not m:
+                # add operand shapes for unnamed
+                opnd = ",".join(comp.types.get(o,"?")[:28] for o in op.operands)
+                key += " <- " + opnd
+            by[key] += H._dot_flops(op, comp.types)*mult
+        for mm in H._CALL_ATTRS.finditer(op.rest):
+            if op.opcode != "while":
+                walk(mm.group(1), mult)
+
+walk(model.entry, 1.0)
+tot = sum(by.values())
+for k,v in sorted(by.items(), key=lambda kv:-kv[1])[:12]:
+    print(f"{v:.3e} {v/tot*100:5.1f}%  {k}")
