@@ -12,6 +12,10 @@ import time
 
 
 def main() -> None:
+    # before ANY section can initialize jax: the executors section needs
+    # multiple host devices and jax locks the count at first init
+    from repro.launch.mesh import ensure_host_devices
+    ensure_host_devices(8)
     os.makedirs("results", exist_ok=True)
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     t0 = time.time()
@@ -35,6 +39,10 @@ def main() -> None:
         print("\n===== Planner-predicted vs HLO collectives =====")
         from . import planner_vs_hlo
         planner_vs_hlo.main()
+    if which in ("all", "executors"):
+        print("\n===== Executor backends: parity + §4.2 overlap =====")
+        from . import executor_overlap
+        executor_overlap.main()
     print(f"\n# benchmarks done in {time.time()-t0:.1f}s")
 
 

@@ -1,12 +1,19 @@
 """HDArray quickstart — the paper's GEMM (Listing 1.2) in JAX-hosted
 form, on 4 simulated devices.
 
-    PYTHONPATH=src python examples/quickstart.py
-"""
-import numpy as np
+    PYTHONPATH=src python examples/quickstart.py [--backend sim|null|jax]
 
-from repro.core import (COL_ALL, HDArrayRuntime, IDENTITY_2D, ROW_ALL,
-                        lower_plan)
+``--backend`` selects the executor that carries the planner's
+messages (see repro/executors/):
+
+  sim   (default) host-numpy section copies — the validation oracle
+  null  metadata only: plans + byte counts, no data
+  jax   real XLA collectives (all_gather here) inside shard_map over a
+        host-device mesh
+"""
+import argparse
+
+import numpy as np
 
 
 def gemm_kernel(region, bufs, alpha=1.0):
@@ -15,13 +22,20 @@ def gemm_kernel(region, bufs, alpha=1.0):
     bufs["c"][rows, :] = alpha * (bufs["a"][rows, :] @ bufs["b"])
 
 
-def main():
+def main(backend: str = "sim"):
     n, nproc = 256, 4
+    if backend == "jax":
+        # must run before jax's first device init
+        from repro.launch.mesh import ensure_host_devices
+        ensure_host_devices(nproc)
+    from repro.core import (COL_ALL, HDArrayRuntime, IDENTITY_2D, ROW_ALL,
+                            lower_plan)
+
     rng = np.random.default_rng(0)
     A = rng.normal(size=(n, n)).astype(np.float32)
     B = rng.normal(size=(n, n)).astype(np.float32)
 
-    rt = HDArrayRuntime(nproc)                   # HDArrayInit
+    rt = HDArrayRuntime(nproc, backend=backend)  # HDArrayInit
     part = rt.partition_row((n, n))              # HDArrayPartition(ROW)
     hA = rt.create("a", (n, n))                  # HDArrayCreate x3
     hB = rt.create("b", (n, n))
@@ -31,27 +45,34 @@ def main():
     rt.write(hC, np.zeros((n, n), np.float32), part)
 
     # HDArrayApplyKernel: plan comm (Eqns 1-2) -> move -> run -> commit
+    kern = None if backend == "null" else gemm_kernel
     plan = rt.apply_kernel(
-        "gemm", part, gemm_kernel, [hA, hB, hC],
+        "gemm", part, kern, [hA, hB, hC],
         uses={"a": ROW_ALL,      # each work item reads its row of A
               "b": COL_ALL},     # ... and the full column of B
         defs={"c": IDENTITY_2D},  # ... and writes its own C element
-        alpha=1.0)
+        **({} if kern is None else {"alpha": 1.0}))
 
-    C = rt.read(hC, part)                        # HDArrayRead
-    np.testing.assert_allclose(C, A @ B, rtol=2e-4)
-    print(f"GEMM on {nproc} devices: OK, max|err| = "
-          f"{np.abs(C - A@B).max():.2e}")
+    if backend != "null":
+        C = rt.read(hC, part)                    # HDArrayRead
+        np.testing.assert_allclose(C, A @ B, rtol=2e-4)
+        print(f"GEMM on {nproc} devices [{backend}]: OK, max|err| = "
+              f"{np.abs(C - A@B).max():.2e}")
     print(f"planner moved {plan.bytes_total/2**20:.2f} MiB:")
     for op in lower_plan(plan, axis='model'):
         print("  ", op.describe())
+    if backend == "jax":
+        print(f"collectives issued: {rt.executor.collective_counts}")
     # second call: B already everywhere -> zero communication (GDEF)
-    plan2 = rt.apply_kernel("gemm", part, gemm_kernel, [hA, hB, hC],
+    plan2 = rt.apply_kernel("gemm", part, kern, [hA, hB, hC],
                             uses={"a": ROW_ALL, "b": COL_ALL},
-                            defs={"c": IDENTITY_2D}, alpha=1.0)
+                            defs={"c": IDENTITY_2D},
+                            **({} if kern is None else {"alpha": 1.0}))
     print(f"second call: {plan2.bytes_total} bytes (cached plan: "
           f"{plan2.cached}) — the GDEF state makes re-sends unnecessary")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="sim", choices=("sim", "null", "jax"))
+    main(ap.parse_args().backend)

@@ -1,0 +1,110 @@
+"""Version shims for the jax APIs this repo relies on.
+
+The codebase targets the *current* jax surface (``jax.shard_map``,
+``jax.sharding.get_abstract_mesh`` / ``set_mesh``,
+``pallas.tpu.CompilerParams``), but the pinned toolchain ships jax
+0.4.37 where several of those names either do not exist yet or carry
+their pre-rename spelling.  Everything version-dependent is funnelled
+through this module so the rest of the tree can use one spelling:
+
+=====================  ==========================================
+modern name            0.4.37 fallback
+=====================  ==========================================
+get_abstract_mesh()    thread-local physical mesh (``with mesh:``)
+set_mesh(mesh)         no-op context manager (``with mesh`` already
+                       installs the thread-local mesh on 0.4.37)
+shard_map(...)         jax.experimental.shard_map.shard_map, with
+                       ``check_vma=`` mapped onto ``check_rep=``
+tpu_compiler_params()  pltpu.TPUCompilerParams
+=====================  ==========================================
+
+Import-time cost is kept near zero: jax submodules are imported lazily
+inside each helper, mirroring the repo's rule that importing a module
+never initializes jax device state.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional
+
+
+def get_abstract_mesh() -> Optional[Any]:
+    """Return the mesh currently in context, or None.
+
+    On new jax this is :func:`jax.sharding.get_abstract_mesh`.  On
+    0.4.37 the only mesh context is the thread-local physical mesh
+    installed by ``with mesh:`` — we return that ``Mesh`` (it exposes
+    the same ``.shape`` mapping and is accepted by shard_map), or None
+    when no mesh is active.  Callers must treat both ``None`` and an
+    empty ``.shape`` as "no mesh" — all in-repo callers already do.
+    """
+    import jax.sharding as jsh
+
+    if hasattr(jsh, "get_abstract_mesh"):
+        return jsh.get_abstract_mesh()
+    from jax._src.mesh import thread_resources
+
+    mesh = thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
+def set_mesh(mesh) -> Any:
+    """Context manager that installs `mesh` as the sharding context.
+
+    New jax: :func:`jax.sharding.set_mesh`.  0.4.37: entering the
+    physical ``Mesh`` itself, which installs the thread-local mesh that
+    :func:`get_abstract_mesh` reads back.  Re-entrant, so pairing with
+    an outer ``with mesh:`` is fine.
+    """
+    import jax.sharding as jsh
+
+    if hasattr(jsh, "set_mesh"):
+        return jsh.set_mesh(mesh)
+
+    @contextlib.contextmanager
+    def _enter():
+        with mesh:
+            yield mesh
+
+    return _enter()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: Optional[bool] = None):
+    """``jax.shard_map`` with the ``check_vma`` kwarg, on any version.
+
+    0.4.37 spells it ``jax.experimental.shard_map.shard_map`` and calls
+    the flag ``check_rep``; both toggle the same replication check.
+    """
+    import jax
+
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version
+    (0.4.x returns a one-element list of dicts, newer returns the dict
+    directly; either may be empty)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the CompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

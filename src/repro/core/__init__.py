@@ -6,8 +6,11 @@ Public surface:
   offsets   — use/def offset + absolute-section clauses
   hdarray   — the HDArray handle and its coherence state
   planner   — Eqns (1)-(4), pattern classification, plan cache
-  comm      — SimExecutor + TPU collective lowering (halo/all-gather)
-  runtime   — HDArrayRuntime facade (paper Table 2)
+  comm      — symbolic collective lowering (halo/all-gather descriptors)
+  runtime   — HDArrayRuntime facade (paper Table 2), backend selector
+
+Executor backends (sim / null / jax) live in :mod:`repro.executors`;
+SimExecutor and NullExecutor are re-exported here for compatibility.
 """
 from .sections import Box, SectionSet
 from .partition import Partition, PartitionTable, PartType
@@ -16,14 +19,19 @@ from .offsets import (AccessSpec, AbsoluteSpec, stencil, trapezoid,
                       ROW_ALL, COL_ALL, ALL_2D)
 from .hdarray import HDArray
 from .planner import Planner, CommPlan, CommKind, classify
-from .comm import SimExecutor, lower_plan, halo_exchange, all_gather, CollectiveOp
+from .comm import (SimExecutor, NullExecutor, lower_plan, halo_exchange,
+                   all_gather, CollectiveOp)
 from .runtime import HDArrayRuntime
+from repro.executors import (Executor, JaxExecutor, OverlapScheduler,
+                             available_backends, make_executor)
 
 __all__ = [
     "Box", "SectionSet", "Partition", "PartitionTable", "PartType",
     "AccessSpec", "AbsoluteSpec", "stencil", "trapezoid",
     "balanced_triangular_rows", "IDENTITY_1D", "IDENTITY_2D", "ROW_ALL",
     "COL_ALL", "ALL_2D", "HDArray", "Planner", "CommPlan", "CommKind",
-    "classify", "SimExecutor", "lower_plan", "halo_exchange", "all_gather",
-    "CollectiveOp", "HDArrayRuntime",
+    "classify", "SimExecutor", "NullExecutor", "lower_plan",
+    "halo_exchange", "all_gather", "CollectiveOp", "HDArrayRuntime",
+    "Executor", "JaxExecutor", "OverlapScheduler", "available_backends",
+    "make_executor",
 ]

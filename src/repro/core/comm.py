@@ -1,21 +1,27 @@
-"""Communication execution for HDArray plans.
+"""Collective lowering for HDArray plans (+ executor re-exports).
 
-Two executors:
+The executors themselves live in :mod:`repro.executors` — a pluggable
+backend subsystem behind one :class:`~repro.executors.base.Executor`
+protocol:
 
-* :class:`SimExecutor` — the validation path.  Each device holds a
-  full-size host buffer (faithful to the paper's ``HDArrayCreate``,
-  which allocates device buffers of the full user-array size) and
-  messages are executed as section copies.  This runs on CPU with any
-  number of simulated devices and is what the test-suite checks against
-  a serial numpy oracle.
+* ``sim``  (:class:`SimExecutor`, re-exported here) — per-device
+  full-size numpy buffers, messages as host section copies; the
+  validation oracle.
+* ``null`` (:class:`NullExecutor`) — metadata-only byte counting for
+  paper-scale comm-volume studies.
+* ``jax``  (:class:`~repro.executors.jax_exec.JaxExecutor`) — each
+  classified plan executed as REAL XLA collectives (``all_gather`` /
+  ``ppermute`` halos / ``all_to_all``) inside ``shard_map`` over a
+  host-device mesh.  Select with ``HDArrayRuntime(nproc,
+  backend="jax")``.
 
-* collective lowering — the TPU path.  A classified plan is lowered to
-  a :class:`CollectiveSchedule` of TPU-native ops (``all_gather``,
-  ``ppermute`` halos, ``all_to_all``) to be issued inside
-  ``shard_map``.  This is the hardware adaptation of the paper's
-  clEnqueue{Read,Write}BufferRect + MPI p2p/collective pipeline: on a
-  TPU pod the ICI fabric rewards collectives, so the planner's pattern
-  classification picks the collective rather than emulating p2p.
+What remains in this module is the *symbolic* collective lowering:
+:func:`lower_plan` classifies a CommPlan into a list of
+:class:`CollectiveOp` descriptors (the op a TPU pod would issue — the
+hardware adaptation of the paper's clEnqueue{Read,Write}BufferRect +
+MPI p2p/collective pipeline), and :func:`halo_exchange` /
+:func:`all_gather` are the shard_map-side helpers the LM integration
+and kernels call directly.
 """
 from __future__ import annotations
 
@@ -24,94 +30,17 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.executors.null import NullExecutor
+from repro.executors.sim import SimExecutor
+
 from .hdarray import HDArray
 from .planner import ArrayCommPlan, CommKind, CommPlan
 from .sections import Box, SectionSet
 
-
-# ----------------------------------------------------------------------
-# Simulated (host-buffer) executor
-# ----------------------------------------------------------------------
-class SimExecutor:
-    """Executes plans over per-device full-size numpy buffers."""
-
-    def __init__(self) -> None:
-        self.buffers: Dict[str, List[np.ndarray]] = {}
-        self.bytes_moved: int = 0
-        self.messages_executed: int = 0
-
-    def allocate(self, arr: HDArray) -> None:
-        self.buffers[arr.name] = [
-            np.zeros(arr.shape, dtype=arr.dtype) for _ in range(arr.nproc)
-        ]
-
-    def free(self, arr: HDArray) -> None:
-        self.buffers.pop(arr.name, None)
-
-    # -- data movement --------------------------------------------------
-    def write(self, arr: HDArray, data: np.ndarray,
-              per_device: Sequence[SectionSet]) -> None:
-        data = np.asarray(data, dtype=arr.dtype)
-        assert data.shape == arr.shape, (data.shape, arr.shape)
-        bufs = self.buffers[arr.name]
-        for p, secs in enumerate(per_device):
-            for box in secs:
-                sl = box.to_slices()
-                bufs[p][sl] = data[sl]
-
-    def read(self, arr: HDArray, per_device: Sequence[SectionSet]) -> np.ndarray:
-        out = np.zeros(arr.shape, dtype=arr.dtype)
-        bufs = self.buffers[arr.name]
-        for p, secs in enumerate(per_device):
-            for box in secs:
-                sl = box.to_slices()
-                out[sl] = bufs[p][sl]
-        return out
-
-    def execute_messages(self, arr: HDArray,
-                         messages: Dict[Tuple[int, int], SectionSet]) -> None:
-        bufs = self.buffers[arr.name]
-        for (src, dst), secs in messages.items():
-            for box in secs:
-                sl = box.to_slices()
-                bufs[dst][sl] = bufs[src][sl]
-                self.bytes_moved += box.volume() * arr.itemsize
-                self.messages_executed += 1
-
-    def run_kernel(self, kernel: Callable, part_regions: Sequence[Box],
-                   arrays: Sequence[HDArray], **kw) -> None:
-        """Run the kernel once per device over its work region.  The
-        kernel sees full-size device buffers (OpenCL semantics) and
-        mutates its `def` arrays in place."""
-        for p, region in enumerate(part_regions):
-            if region.is_empty():
-                continue
-            bufs = {a.name: self.buffers[a.name][p] for a in arrays}
-            kernel(region, bufs, **kw)
-
-
-class NullExecutor(SimExecutor):
-    """Metadata-only executor: plans are computed, bytes are counted, no
-    buffer is ever allocated or copied.  Lets the paper-scale comm-volume
-    studies (10240^2 arrays, 32 procs, Table 3) run in milliseconds."""
-
-    def allocate(self, arr: HDArray) -> None:
-        self.buffers[arr.name] = None
-
-    def write(self, arr, data, per_device) -> None:
-        pass
-
-    def read(self, arr, per_device):
-        raise RuntimeError("NullExecutor holds no data (metadata-only mode)")
-
-    def execute_messages(self, arr, messages) -> None:
-        for (_src, _dst), secs in messages.items():
-            for box in secs:
-                self.bytes_moved += box.volume() * arr.itemsize
-                self.messages_executed += 1
-
-    def run_kernel(self, kernel, part_regions, arrays, **kw) -> None:
-        raise RuntimeError("NullExecutor cannot run kernels")
+__all__ = [
+    "SimExecutor", "NullExecutor", "CollectiveOp", "lower_plan",
+    "halo_exchange", "all_gather",
+]
 
 
 # ----------------------------------------------------------------------

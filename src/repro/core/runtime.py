@@ -2,7 +2,7 @@
 
 Mirrors the paper's library:
 
-  HDArrayInit              -> HDArrayRuntime(nproc)
+  HDArrayInit              -> HDArrayRuntime(nproc, backend=...)
   HDArrayCreate            -> rt.create(name, shape, dtype)
   HDArrayPartition         -> rt.partition_row/col/block/manual(...)
   HDArrayWrite / Read      -> rt.write / rt.read
@@ -12,6 +12,26 @@ Mirrors the paper's library:
   HDArraySetTrapezoidUse/..-> offsets.trapezoid(...) helper
   (repartition at any point: just pass a different partition id —
    paper §1 contribution 3 / §7 future work on elasticity)
+
+Backend selection (the paper's "one interface drives both layers"):
+``backend=`` picks the executor that carries the classified plans —
+
+  * ``"sim"``  (default) host-numpy buffers, the validation oracle;
+  * ``"null"`` metadata-only (plan + byte accounting, no data);
+  * ``"jax"``  real XLA collectives inside shard_map over a host
+    device mesh (see :mod:`repro.executors.jax_exec`).
+
+The legacy ``materialize=False`` flag still selects ``"null"``.
+
+Overlap semantics (paper §4.2 / Fig. 7): with ``overlap=True`` every
+``apply_kernel`` runs the message execution on a comm thread while the
+Eqn (3)-(4) commit proceeds on the host, and HALO-classified plans
+additionally overlap the interior kernel sweep with the ghost-cell
+exchange (double-buffered halo).  ``run_pipeline`` extends this to a
+program: step i+1's planning overlaps step i's communication.  Overlap
+mode assumes the paper's work-item model — a kernel must be able to
+compute any sub-region of its assigned region independently.  Results
+are bit-identical to the serial schedule (tests enforce it).
 """
 from __future__ import annotations
 
@@ -19,7 +39,9 @@ from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
-from .comm import SimExecutor, lower_plan
+from repro.executors import OverlapScheduler, make_executor
+
+from .comm import lower_plan
 from .hdarray import HDArray
 from .offsets import AbsoluteSpec, AccessSpec
 from .partition import Box, Partition, PartitionTable
@@ -28,14 +50,23 @@ from .sections import SectionSet
 
 
 class HDArrayRuntime:
-    def __init__(self, nproc: int, materialize: bool = True):
-        """materialize=False -> NullExecutor: planner-only mode for
-        paper-scale communication studies (no buffers, no copies)."""
-        from .comm import NullExecutor
+    def __init__(self, nproc: int, materialize: bool = True,
+                 backend: Optional[str] = None, overlap: bool = False,
+                 executor=None):
+        """``backend`` selects the executor ("sim" / "null" / "jax");
+        ``materialize=False`` is the legacy spelling of backend="null".
+        ``overlap=True`` enables the §4.2 comm/compute-overlap schedule.
+        An explicit ``executor`` instance overrides ``backend``."""
+        if backend is None:
+            backend = "sim" if materialize else "null"
         self.nproc = nproc
+        self.backend = backend
         self.parts = PartitionTable()
         self.planner = Planner()
-        self.executor = SimExecutor() if materialize else NullExecutor()
+        self.executor = executor if executor is not None \
+            else make_executor(backend, nproc=nproc)
+        self.overlap = overlap
+        self._scheduler = OverlapScheduler(self.executor) if overlap else None
         self.arrays: Dict[str, HDArray] = {}
         self.comm_log: list = []     # [(kernel, CommPlan bytes, kinds)]
 
@@ -50,6 +81,8 @@ class HDArrayRuntime:
         for a in self.arrays.values():
             self.executor.free(a)
         self.arrays.clear()
+        if self._scheduler is not None:
+            self._scheduler.shutdown()
 
     # -- partitions -------------------------------------------------------
     def partition_row(self, domain, region: Optional[Box] = None) -> int:
@@ -108,20 +141,46 @@ class HDArrayRuntime:
         **kw,
     ) -> CommPlan:
         """Paper Fig. 3: plan comm (Eqns 1-2) -> move data -> run kernel
-        -> commit GDEF updates (Eqns 3-4)."""
+        -> commit GDEF updates (Eqns 3-4).  Under ``overlap=True`` the
+        move/commit (and, for halos, part of the kernel) run
+        concurrently — see the module docstring."""
         part = self.parts[part_id]
         plan = self.planner.plan(kernel_name, part, arrays, uses, defs)
-        for ap in plan.arrays:
-            if ap.messages:
-                self.executor.execute_messages(self.arrays[ap.array], ap.messages)
-        if kernel is not None:
-            self.executor.run_kernel(kernel, part.regions, arrays, **kw)
-        self.planner.commit(plan, arrays, part)
+        if self._scheduler is not None:
+            self._scheduler.step(
+                plan, part, kernel, arrays, self.arrays, uses, defs, kw,
+                commit=lambda: self.planner.commit(plan, arrays, part))
+        else:
+            for ap in plan.arrays:
+                if ap.messages:
+                    self.executor.execute_messages(
+                        self.arrays[ap.array], ap.messages, kind=ap.kind)
+            if kernel is not None:
+                self.executor.run_kernel(kernel, part.regions, arrays, **kw)
+            self.planner.commit(plan, arrays, part)
+        self.log_plan(kernel_name, plan)
+        return plan
+
+    def run_pipeline(self, steps: Sequence[Dict]) -> list:
+        """Run a program of apply_kernel steps with the Fig. 7 schedule:
+        step i+1's planning overlaps step i's message execution.  Each
+        step: dict(kernel_name=, part_id=, kernel=, arrays=, uses=,
+        defs=, kw={}).  Requires overlap=True; with overlap off it
+        degrades to sequential apply_kernel calls."""
+        if self._scheduler is None:
+            return [self.apply_kernel(
+                        st["kernel_name"], st["part_id"], st["kernel"],
+                        st["arrays"], st["uses"], st["defs"],
+                        **st.get("kw", {}))
+                    for st in steps]
+        return self._scheduler.pipeline(self, list(steps))
+
+    def log_plan(self, kernel_name: str, plan: CommPlan) -> None:
         self.comm_log.append(
             (kernel_name, plan.bytes_total,
-             tuple((ap.array, ap.kind.value, ap.bytes_total) for ap in plan.arrays))
+             tuple((ap.array, ap.kind.value, ap.bytes_total)
+                   for ap in plan.arrays))
         )
-        return plan
 
     def plan_only(self, kernel_name, part_id, arrays, uses, defs) -> CommPlan:
         """Plan + commit WITHOUT executing (metadata-only mode — used for

@@ -1,0 +1,36 @@
+"""Pluggable executor backends for the HDArray runtime.
+
+The paper's library drives two layers through one interface: MPI
+between processes and OpenCL within them.  This package is that idea
+for the JAX port — one :class:`~repro.executors.base.Executor`
+protocol, several interchangeable backends:
+
+=========  ============================================================
+backend    what executes a classified ``CommPlan``
+=========  ============================================================
+``sim``    per-device full-size numpy buffers, messages as host
+           section copies — the validation oracle
+           (:class:`~repro.executors.sim.SimExecutor`)
+``null``   metadata only: bytes counted, nothing allocated — paper-
+           scale comm-volume studies in milliseconds
+           (:class:`~repro.executors.null.NullExecutor`)
+``jax``    real XLA collectives: each ``ArrayCommPlan`` is lowered by
+           CommKind to ``jax.lax.all_gather`` / ``ppermute`` /
+           ``all_to_all`` inside ``shard_map`` over a host-device mesh
+           (:class:`~repro.executors.jax_exec.JaxExecutor`)
+=========  ============================================================
+
+Select with ``HDArrayRuntime(nproc, backend="jax")`` or construct via
+:func:`make_executor`.  The overlap-aware schedule (paper §4.2/Fig. 7)
+lives in :mod:`repro.executors.overlap` and works with any backend.
+"""
+from .base import Executor, available_backends, make_executor, register_executor
+from .sim import SimExecutor
+from .null import NullExecutor
+from .jax_exec import JaxExecutor
+from .overlap import OverlapScheduler
+
+__all__ = [
+    "Executor", "available_backends", "make_executor", "register_executor",
+    "SimExecutor", "NullExecutor", "JaxExecutor", "OverlapScheduler",
+]

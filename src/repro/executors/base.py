@@ -1,0 +1,92 @@
+"""The Executor protocol: what a backend must do for the HDArray
+runtime, and the registry that makes backends selectable by name.
+
+An executor owns the per-device storage of every HDArray and performs
+the four runtime actions the paper's library issues (§5):
+
+* ``allocate`` / ``free`` — device buffers of the full user-array size
+  (paper ``HDArrayCreate``: every device can hold any section),
+* ``write`` / ``read`` — controller <-> device section transfers
+  (``HDArrayWrite`` / ``HDArrayRead``, the clEnqueue*BufferRect path),
+* ``execute_messages`` — move a planner-classified message set between
+  devices.  The optional ``kind`` is the planner's CommKind pattern so
+  a backend can lower to the matching collective instead of emulating
+  point-to-point copies,
+* ``run_kernel`` — invoke the user kernel once per device over its work
+  region, against full-size device buffers (OpenCL semantics).
+
+Backends register with :func:`register_executor` and are constructed by
+name via :func:`make_executor` — the hook behind
+``HDArrayRuntime(nproc, backend=...)``.
+
+Every executor also keeps two counters the benchmarks and tests read:
+``bytes_moved`` (payload bytes of executed messages) and
+``messages_executed`` (one per transferred box).
+"""
+from __future__ import annotations
+
+from typing import (TYPE_CHECKING, Callable, Dict, Optional, Protocol,
+                    Sequence, Tuple, runtime_checkable)
+
+if TYPE_CHECKING:
+    import numpy as np
+
+    from repro.core.hdarray import HDArray
+    from repro.core.planner import CommKind
+    from repro.core.sections import Box, SectionSet
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """Structural protocol every backend implements (duck-typed: any
+    object with these members works, registration is optional)."""
+
+    bytes_moved: int
+    messages_executed: int
+
+    def allocate(self, arr: "HDArray") -> None: ...
+
+    def free(self, arr: "HDArray") -> None: ...
+
+    def write(self, arr: "HDArray", data: "np.ndarray",
+              per_device: Sequence["SectionSet"]) -> None: ...
+
+    def read(self, arr: "HDArray",
+             per_device: Sequence["SectionSet"]) -> "np.ndarray": ...
+
+    def execute_messages(
+        self, arr: "HDArray",
+        messages: Dict[Tuple[int, int], "SectionSet"],
+        kind: Optional["CommKind"] = None,
+    ) -> None: ...
+
+    def run_kernel(self, kernel: Callable, part_regions: Sequence["Box"],
+                   arrays: Sequence["HDArray"], **kw) -> None: ...
+
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_executor(name: str):
+    """Class decorator: make a backend constructible by name."""
+
+    def deco(cls: type) -> type:
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_executor(backend: str, nproc: Optional[int] = None, **kw) -> "Executor":
+    """Instantiate a registered backend (``sim`` / ``null`` / ``jax``)."""
+    try:
+        cls = _REGISTRY[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown executor backend {backend!r}; "
+            f"available: {available_backends()}") from None
+    return cls(nproc=nproc, **kw)

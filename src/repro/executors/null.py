@@ -1,0 +1,47 @@
+"""NullExecutor — the metadata-only backend.
+
+Plans are computed and classified, bytes are counted, but no buffer is
+ever allocated and no element is ever copied.  This is what lets the
+paper-scale communication-volume studies (10240^2 arrays, 32
+processes, Table 3) run in milliseconds: the planner's set algebra is
+the only work left.
+
+Selected with ``HDArrayRuntime(nproc, backend="null")`` (or the legacy
+``materialize=False``).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, Optional, Tuple
+
+from .base import register_executor
+from .sim import SimExecutor
+
+if TYPE_CHECKING:
+    from repro.core.hdarray import HDArray
+    from repro.core.planner import CommKind
+    from repro.core.sections import SectionSet
+
+
+@register_executor("null")
+class NullExecutor(SimExecutor):
+    """Counts plan traffic without holding any data."""
+
+    def allocate(self, arr: "HDArray") -> None:
+        self.buffers[arr.name] = None
+
+    def write(self, arr, data, per_device) -> None:
+        pass
+
+    def read(self, arr, per_device):
+        raise RuntimeError("NullExecutor holds no data (metadata-only mode)")
+
+    def execute_messages(self, arr: "HDArray",
+                         messages: Dict[Tuple[int, int], "SectionSet"],
+                         kind: Optional["CommKind"] = None) -> None:
+        for (_src, _dst), secs in messages.items():
+            for box in secs:
+                self.bytes_moved += box.volume() * arr.itemsize
+                self.messages_executed += 1
+
+    def run_kernel(self, kernel, part_regions, arrays, **kw) -> None:
+        raise RuntimeError("NullExecutor cannot run kernels")

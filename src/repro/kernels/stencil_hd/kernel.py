@@ -16,7 +16,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro import compat
 
 
 def _jacobi_kernel(up_ref, mid_ref, dn_ref, o_ref, *, nm: int, m_true: int):
@@ -60,7 +62,7 @@ def jacobi_pallas(x, *, block_m: int = 256, interpret: bool = False):
         ],
         out_specs=pl.BlockSpec((bm, N), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Mp, N), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x, x, x)

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import SHAPES, all_configs, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.models import build
@@ -153,7 +154,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     rec["train_cfg"] = dataclasses.asdict(tcfg)
     rec["moment_dtype"] = moment_dtype
 
-    with mesh, jax.sharding.set_mesh(mesh):
+    with mesh, compat.set_mesh(mesh):
         if shape_cell.kind == "train":
             if tcfg.param_dtype == "bf16":
                 params_shape = _cast_shapes(params_shape, jnp.bfloat16)
@@ -212,9 +213,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         mem["error"] = repr(e)
     rec["memory"] = mem
 
-    ca = compiled.cost_analysis()
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0] if ca else {}
+    ca = compat.cost_analysis(compiled)
     rec["cost"] = {k: float(v) for k, v in ca.items()
                    if isinstance(v, (int, float)) and
                    k in ("flops", "bytes accessed", "transcendentals",

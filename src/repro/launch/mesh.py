@@ -40,3 +40,51 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     for s in shape:
         n *= s
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+# ----------------------------------------------------------------------
+# HDArray executor-layer host meshes
+# ----------------------------------------------------------------------
+def ensure_host_devices(n: int) -> bool:
+    """Request at least `n` XLA host-platform devices (JaxExecutor).
+
+    Must run BEFORE jax's first backend init (the device count is
+    locked then).  A pre-existing ``xla_force_host_platform_device_
+    count`` smaller than `n` is raised to `n`.  Returns True when `n`
+    devices are (or will be) available, False when jax has already
+    initialized with fewer — callers fall back or get the clear error
+    from :func:`make_host_mesh`.
+    """
+    import os
+    import re
+    import sys
+
+    key = "xla_force_host_platform_device_count"
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(key + r"=(\d+)", flags)
+    if m is None:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --{key}={n}").strip()
+    elif int(m.group(1)) < n:
+        os.environ["XLA_FLAGS"] = re.sub(key + r"=\d+", f"{key}={n}", flags)
+    if "jax" in sys.modules:
+        import jax as _jax
+
+        # if the backend was not initialized yet, the env var above is
+        # still effective and this reports the post-flag device count
+        return len(_jax.devices()) >= n
+    return True
+
+
+def make_host_mesh(nproc: int, axis: str = "p"):
+    """1-D mesh of `nproc` host devices — the device fabric the
+    JaxExecutor lowers classified CommPlans onto (one mesh rank per
+    HDArray process)."""
+    devices = jax.devices()
+    if len(devices) < nproc:
+        raise RuntimeError(
+            f"host mesh needs {nproc} devices, found {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{nproc} before the first jax init (see "
+            "launch.mesh.ensure_host_devices)")
+    return jax.make_mesh((nproc,), (axis,), devices=devices[:nproc])

@@ -1,0 +1,21 @@
+"""Test-session bootstrap.
+
+The JaxExecutor parity tests shard over a host-device mesh, which
+needs more than one XLA host-platform device.  jax pins the device
+count at first backend init, so the flag must be in the environment
+before any test module imports jax — conftest import time is the one
+hook that reliably precedes that.  8 devices covers every nproc used
+by the tests; single-device semantics of all other tests are
+unaffected (computations still run on device 0 unless explicitly
+sharded).
+
+Subprocess tests (test_dryrun_subprocess) are unaffected: dryrun.py
+overwrites XLA_FLAGS in its own fresh process.
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if "jax" not in __import__("sys").modules:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (flags + " " + _FLAG).strip()

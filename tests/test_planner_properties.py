@@ -12,6 +12,7 @@ Invariants of the paper's Eqns (1)-(4), checked over random programs:
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # soft dep: property tests skip without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (AccessSpec, Box, HDArrayRuntime, IDENTITY_2D,

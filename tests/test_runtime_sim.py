@@ -4,7 +4,24 @@ These are the paper's benchmarks run small: if the planner's messages
 were wrong (missing halo, stale GDEF), the numbers would diverge."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # soft dep: property tests skip, unit tests still run
+    class _StubStrategy:
+        """Absorbs strategy expressions built at import time."""
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _StubStrategy()
+
+    def _skip_without_hypothesis(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    given = settings = _skip_without_hypothesis
 
 from repro.core import (AccessSpec, Box, HDArrayRuntime, IDENTITY_2D,
                         ROW_ALL, COL_ALL)

@@ -1,0 +1,104 @@
+"""Docs link/anchor/symbol checker (run in CI).
+
+Validates, over README.md and docs/*.md:
+
+1. every relative markdown link ``[text](path)`` resolves to a file in
+   the repo;
+2. every ``path#anchor`` link's anchor matches a heading in the target
+   (GitHub-style slugs);
+3. every backticked dotted ``repro.*`` reference resolves against the
+   actual code (import the module prefix, getattr the rest) — so the
+   docs can never drift from a refactor silently.
+
+Exit code 0 = clean; 1 = problems (each printed).
+
+Usage: PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([A-Za-z0-9_.]+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)      # drop punctuation (keep -, _)
+    return s.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    text = path.read_text(encoding="utf-8")
+    return {slugify(h) for h in HEADING_RE.findall(text)}
+
+
+def check_links(doc: Path, text: str, problems: list) -> None:
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        base = doc.parent / path_part if path_part else doc
+        if not base.exists():
+            problems.append(f"{doc.name}: broken link -> {target}")
+            continue
+        if anchor and base.suffix == ".md":
+            if slugify(anchor) not in anchors_of(base):
+                problems.append(
+                    f"{doc.name}: missing anchor -> {target} "
+                    f"(known: {sorted(anchors_of(base))})")
+
+
+def resolve_symbol(dotted: str) -> bool:
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        modname = ".".join(parts[:cut])
+        try:
+            obj = importlib.import_module(modname)
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_symbols(doc: Path, text: str, problems: list) -> None:
+    for dotted in CODE_RE.findall(text):
+        if not dotted.startswith("repro.") or dotted.endswith("."):
+            continue
+        if not resolve_symbol(dotted):
+            problems.append(f"{doc.name}: unresolved symbol `{dotted}`")
+
+
+def main() -> int:
+    problems: list = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            problems.append(f"missing doc file: {doc}")
+            continue
+        text = doc.read_text(encoding="utf-8")
+        check_links(doc, text, problems)
+        check_symbols(doc, text, problems)
+    if problems:
+        print(f"docs check: {len(problems)} problem(s)")
+        for p in problems:
+            print("  -", p)
+        return 1
+    print(f"docs check: OK ({len(DOC_FILES)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
