@@ -1,0 +1,252 @@
+"""Planner scaling sweep: vectorized/sparse planner vs the frozen
+pre-PR dense baseline (`repro.core._reference`).
+
+For P ∈ {32, 128, 256, 1024} (quick mode: {32, 128}) and three program
+shapes — Jacobi 4-pt stencil, GEMM row-partitioned, and a block-grid
+repartition ping-pong — measures per-step **plan + commit** wall time
+(the paper's host-side runtime overhead, Fig. 6/7) in steady state and
+on the cold first step, verifies **plan parity** (identical messages /
+kinds / bytes) and GDEF parity between the two implementations, and
+writes:
+
+  results/planner_scaling.json   — every measured row
+  BENCH_planner.json             — per-(case, P) summary + speedups
+
+(quick mode writes results/planner_scaling_quick.json instead, so CI
+smoke runs never clobber the committed full sweep).
+
+The reference becomes very slow at large P (that is the point); its
+iteration counts shrink adaptively and GEMM caps at P=256.  Usage:
+
+  python -m benchmarks.planner_scaling [--quick]
+  python -m benchmarks.run planner          # quick smoke (CI)
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (AccessSpec, Box, HDArray, IDENTITY_2D, ROW_ALL,
+                        COL_ALL, Partition, SectionSet, stencil)
+from repro.core._reference import (RefArray, RefPlanner, from_live,
+                                   live_plan_signature, ref_plan_signature)
+from repro.core.planner import Planner
+
+SHAPE = (2048, 2048)
+
+
+# -- program shapes -----------------------------------------------------
+def _clip(region: Box, shape) -> SectionSet:
+    if region.is_empty():
+        return SectionSet.empty(len(shape))
+    return SectionSet.of(region.clamp(shape))
+
+
+def _jacobi(nproc: int):
+    interior = Box.make((1, SHAPE[0] - 1), (1, SHAPE[1] - 1))
+    pdata = Partition.row(0, SHAPE, nproc)
+    pwork = Partition.row(1, SHAPE, nproc, region=interior)
+    st4 = stencil(2, 1)
+    writes = {"A": pdata, "B": pdata}
+    def steps(i):
+        return [("j1", pwork, {"B": st4}, {"A": IDENTITY_2D}),
+                ("j2", pwork, {"A": IDENTITY_2D}, {"B": IDENTITY_2D})]
+    return ["A", "B"], writes, steps
+
+
+def _gemm(nproc: int):
+    part = Partition.row(0, SHAPE, nproc)
+    writes = {"a": part, "b": part, "c": part}
+    def steps(i):
+        return [("gemm", part, {"a": ROW_ALL, "b": COL_ALL},
+                 {"c": IDENTITY_2D})]
+    return ["a", "b", "c"], writes, steps
+
+
+def _repartition(nproc: int):
+    g0 = int(np.sqrt(nproc))
+    while nproc % g0:
+        g0 -= 1
+    pa = Partition.block(0, SHAPE, nproc, grid=(g0, nproc // g0))
+    pb = Partition.block(1, SHAPE, nproc, grid=(nproc // g0, g0))
+    ident = AccessSpec.of((0, 0))
+    writes = {"x": pa}
+    def steps(i):
+        part = pb if i % 2 == 0 else pa
+        return [(f"repart_{part.part_id}", part, {"x": ident}, {"x": ident})]
+    return ["x"], writes, steps
+
+
+CASES = {"jacobi": _jacobi, "gemm": _gemm, "repartition": _repartition}
+
+
+# -- drivers ------------------------------------------------------------
+class LiveDriver:
+    impl = "new"
+
+    def __init__(self, names, writes, nproc):
+        self.planner = Planner()
+        self.arrays = {s: HDArray(s, SHAPE, np.float32, nproc)
+                       for s in names}
+        for s, part in writes.items():
+            per = tuple(_clip(r, SHAPE) for r in part.regions)
+            self.arrays[s].record_write(per)
+
+    def step(self, kernels):
+        sigs = []
+        for kernel, part, uses, defs in kernels:
+            arrs = list(self.arrays.values())
+            plan = self.planner.plan(kernel, part, arrs, uses, defs)
+            self.planner.commit(plan, arrs, part)
+            sigs.append(live_plan_signature(plan))
+        return sigs
+
+    def stats(self):
+        s = self.planner.stats
+        return {"plans_computed": s.plans_computed,
+                "intersect_ops": s.intersect_ops,
+                "pairs_pruned": s.pairs_pruned,
+                "hits_history": s.hits_history,
+                "hits_state_compare": s.hits_state_compare,
+                "commit_replays": s.commit_replays}
+
+
+class RefDriver:
+    impl = "ref"
+
+    def __init__(self, names, writes, nproc):
+        self.planner = RefPlanner()
+        self.arrays = {s: RefArray(s, SHAPE, 4, nproc) for s in names}
+        for s, part in writes.items():
+            per = tuple(from_live(_clip(r, SHAPE)) for r in part.regions)
+            self.arrays[s].record_write(per)
+
+    def step(self, kernels):
+        sigs = []
+        for kernel, part, uses, defs in kernels:
+            entry = self.planner.plan_and_commit(
+                kernel, part, list(self.arrays.values()), uses, defs)
+            sigs.append(ref_plan_signature(entry))
+        return sigs
+
+    def stats(self):
+        s = self.planner.stats
+        return {"plans_computed": s.plans_computed,
+                "intersect_ops": s.intersect_ops}
+
+
+def _measure(driver_cls, case_fn, nproc, warmup, iters):
+    names, writes, steps = case_fn(nproc)
+    d = driver_cls(names, writes, nproc)
+    t0 = time.perf_counter()
+    d.step(steps(0))
+    cold_s = time.perf_counter() - t0
+    for i in range(1, 1 + warmup):
+        d.step(steps(i))
+    t0 = time.perf_counter()
+    for i in range(1 + warmup, 1 + warmup + iters):
+        d.step(steps(i))
+    per_step = (time.perf_counter() - t0) / iters
+    row = {"impl": driver_cls.impl, "nproc": nproc, "cold_s": cold_s,
+           "per_step_s": per_step, "iters": iters}
+    row.update(d.stats())
+    return row
+
+
+def _parity(case_fn, nproc, steps_n) -> bool:
+    names, writes, steps = case_fn(nproc)
+    live = LiveDriver(names, writes, nproc)
+    ref = RefDriver(names, writes, nproc)
+    for i in range(steps_n):
+        if live.step(steps(i)) != ref.step(steps(i)):
+            return False
+    return True
+
+
+def run_case(case: str, nproc: int, quick: bool,
+             ref_cap: Optional[int]) -> List[dict]:
+    case_fn = CASES[case]
+    iters_new = 5 if quick else 20
+    rows = [_measure(LiveDriver, case_fn, nproc, warmup=2, iters=iters_new)]
+    run_ref = ref_cap is None or nproc <= ref_cap
+    if run_ref:
+        # the dense baseline's cost explodes with P — shrink its sample
+        # (its steady state is commit-dominated, so few steps suffice)
+        ref_iters = max(1, min(5, 2048 // nproc))
+        rows.append(_measure(RefDriver, case_fn, nproc,
+                             warmup=1 if nproc <= 256 else 0,
+                             iters=ref_iters))
+        rows.append({"impl": "parity", "nproc": nproc,
+                     "parity": _parity(case_fn, nproc,
+                                       steps_n=1 if nproc >= 512 else 3)})
+    for r in rows:
+        r["case"] = case
+    return rows
+
+
+def main(quick: bool = False) -> dict:
+    procs = (32, 128) if quick else (32, 128, 256, 1024)
+    all_rows: List[dict] = []
+    summary: Dict[str, dict] = {}
+    for case in CASES:
+        ref_cap = 256 if case == "gemm" else None  # P² messages: see module doc
+        for nproc in procs:
+            rows = run_case(case, nproc, quick, ref_cap)
+            all_rows.extend(rows)
+            new = next(r for r in rows if r["impl"] == "new")
+            ref = next((r for r in rows if r["impl"] == "ref"), None)
+            par = next((r for r in rows if r["impl"] == "parity"), None)
+            entry = {"new_per_step_s": new["per_step_s"],
+                     "new_cold_s": new["cold_s"],
+                     "intersect_ops_new": new["intersect_ops"],
+                     "pairs_pruned": new["pairs_pruned"]}
+            if ref is not None:
+                entry.update(
+                    ref_per_step_s=ref["per_step_s"],
+                    ref_cold_s=ref["cold_s"],
+                    intersect_ops_ref=ref["intersect_ops"],
+                    speedup_steady=ref["per_step_s"] / new["per_step_s"],
+                    speedup_cold=ref["cold_s"] / new["cold_s"],
+                    parity=bool(par and par["parity"]))
+            summary[f"{case}@{nproc}"] = entry
+            msg = (f"{case:12s} P={nproc:5d} new={new['per_step_s']*1e3:9.3f}"
+                   f"ms/step")
+            if ref is not None:
+                msg += (f"  ref={ref['per_step_s']*1e3:10.3f}ms/step "
+                        f"speedup={entry['speedup_steady']:7.1f}x "
+                        f"parity={'OK' if entry['parity'] else 'FAIL'}")
+            print(msg, flush=True)
+    out = {"shape": list(SHAPE), "quick": quick, "summary": summary}
+    import os
+    os.makedirs("results", exist_ok=True)
+    # quick (CI smoke) runs must not clobber the committed full sweep
+    dest = ("results/planner_scaling_quick.json" if quick
+            else "results/planner_scaling.json")
+    with open(dest, "w") as f:
+        json.dump({"rows": all_rows, **out}, f, indent=1, default=str)
+    if not quick:
+        with open("BENCH_planner.json", "w") as f:
+            json.dump(out, f, indent=1)
+    ok = all(e.get("parity", True) for e in summary.values())
+    target = [e["speedup_steady"] for k, e in summary.items()
+              if "speedup_steady" in e and int(k.split("@")[1]) >= 256]
+    if target:
+        print(f"# min speedup at P>=256: {min(target):.1f}x "
+              f"(acceptance: >=10x); parity {'OK' if ok else 'FAIL'}")
+    print(f"# -> {dest}" + ("" if quick else " + BENCH_planner.json"))
+    # fail loudly so the CI smoke step actually gates regressions
+    if not ok:
+        raise SystemExit("planner_scaling: PARITY FAILURE vs the dense "
+                         "reference planner")
+    if target and min(target) < 10.0:
+        raise SystemExit(f"planner_scaling: speedup regression — "
+                         f"{min(target):.1f}x < 10x at P>=256")
+    return out
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv[1:])

@@ -31,6 +31,12 @@ def main() -> None:
         print("\n===== Paper Fig. 6/7: runtime overhead =====")
         from . import paper_overhead
         paper_overhead.main()
+    if which in ("all", "planner"):
+        print("\n===== Planner scaling: sparse vs pre-PR dense =====")
+        from . import planner_scaling
+        # quick sweep here (CI smoke); run the module directly for the
+        # full P<=1024 sweep that regenerates BENCH_planner.json
+        planner_scaling.main(quick=True)
     if which in ("all", "roofline"):
         print("\n===== Dry-run roofline table =====")
         from . import roofline_table

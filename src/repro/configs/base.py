@@ -179,10 +179,13 @@ class ArchConfig:
         )
         if self.moe:
             # dropless capacity in the reduced config so prefill+decode
-            # exactly matches forward (capacity dropping is non-causal)
+            # exactly matches forward (capacity dropping is non-causal).
+            # C = int(cf*B*T*k/E) only covers the worst case of every
+            # token routing to one expert (B*T*k slots) when cf >= E;
+            # cf=4 < 8 left the one-token decode step with C=2.
             kw["moe"] = replace(self.moe, num_experts=8, top_k=2,
                                 d_expert_ff=32, d_shared_ff=32,
-                                capacity_factor=4.0)
+                                capacity_factor=8.0)
             kw["dense_layers"] = min(self.dense_layers, 1)
         if self.mla:
             kw["mla"] = MLACfg(q_lora=32, kv_lora=16, d_nope=16, d_rope=8, d_v=16)

@@ -1,0 +1,384 @@
+"""Frozen pre-PR planner: the dense O(P²), pure-Python implementation.
+
+This module preserves the original scalar section algebra and the
+all-pairs SENDMSG/commit loops exactly as they were before the
+vectorized/sparse rewrite.  It exists for two purposes:
+
+* **parity** — `tests/test_planner_parity.py` asserts the live planner
+  emits bit-identical plans (messages, kinds, bytes) and evolves a
+  bit-identical GDEF on randomized programs;
+* **benchmarking** — `benchmarks/planner_scaling.py` measures the live
+  planner's plan+commit speedup against this baseline at large P.
+
+It is deliberately self-contained (its own section type, dense
+list-of-lists GDEF, its own plan cache replicating the §4.2 two-step
+reuse) so changes to the live modules cannot silently change the
+baseline.  Do not "optimize" this file.
+
+Sections here are tuples of per-dim half-open ``(lo, hi)`` interval
+tuples; a RefSectionSet holds the canonical sorted tuple of such rows
+(identical canonical form to the live SectionSet, which is what makes
+cross-implementation comparison a plain equality on bounds).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+Row = Tuple[Tuple[int, int], ...]
+
+
+# -- scalar section algebra (pre-PR Box/SectionSet semantics) ----------
+def _row_empty(r: Row) -> bool:
+    return any(hi <= lo for lo, hi in r)
+
+
+def _row_volume(r: Row) -> int:
+    v = 1
+    for lo, hi in r:
+        v *= max(0, hi - lo)
+    return v
+
+
+def _row_intersect(a: Row, b: Row) -> Row:
+    return tuple((max(alo, blo), min(ahi, bhi))
+                 for (alo, ahi), (blo, bhi) in zip(a, b))
+
+
+def _row_subtract(a: Row, b: Row) -> List[Row]:
+    inter = _row_intersect(a, b)
+    if _row_empty(inter):
+        return [a]
+    out: List[Row] = []
+    cur = list(a)
+    for d in range(len(a)):
+        (slo, shi), (ilo, ihi) = cur[d], inter[d]
+        if slo < ilo:
+            piece = list(cur)
+            piece[d] = (slo, ilo)
+            out.append(tuple(piece))
+        if ihi < shi:
+            piece = list(cur)
+            piece[d] = (ihi, shi)
+            out.append(tuple(piece))
+        cur[d] = inter[d]
+    return [r for r in out if not _row_empty(r)]
+
+
+def _merge_1d(ivs) -> List[Tuple[int, int]]:
+    ivs = sorted(iv for iv in ivs if iv[1] > iv[0])
+    out: List[Tuple[int, int]] = []
+    for lo, hi in ivs:
+        if out and lo <= out[-1][1]:
+            if hi > out[-1][1]:
+                out[-1] = (out[-1][0], hi)
+        else:
+            out.append((lo, hi))
+    return out
+
+
+def _canonicalize(rows: Sequence[Row]) -> Tuple[Row, ...]:
+    rows = [r for r in rows if not _row_empty(r)]
+    if not rows:
+        return ()
+    nd = len(rows[0])
+    if nd == 1:
+        return tuple((iv,) for iv in _merge_1d([r[0] for r in rows]))
+    cuts = sorted({c for r in rows for c in r[0]})
+    slabs: list = []
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        rest = [r[1:] for r in rows if r[0][0] <= lo and hi <= r[0][1]]
+        if not rest:
+            continue
+        crest = _canonicalize(rest)
+        if slabs and slabs[-1][1] == crest and slabs[-1][0][1] == lo:
+            slabs[-1] = ((slabs[-1][0][0], hi), crest)
+        else:
+            slabs.append(((lo, hi), crest))
+    out: list = []
+    for iv, crest in slabs:
+        for r in crest:
+            out.append((iv,) + r)
+    return tuple(sorted(out))
+
+
+@dataclass(frozen=True)
+class RefSectionSet:
+    rows: Tuple[Row, ...]  # canonical sorted disjoint rows
+
+    @staticmethod
+    def of(rows: Sequence[Row]) -> "RefSectionSet":
+        return RefSectionSet(_canonicalize(list(rows)))
+
+    def is_empty(self) -> bool:
+        return not self.rows
+
+    def volume(self) -> int:
+        return sum(_row_volume(r) for r in self.rows)
+
+    def union(self, other: "RefSectionSet") -> "RefSectionSet":
+        if self.is_empty():
+            return other
+        if other.is_empty():
+            return self
+        return RefSectionSet(_canonicalize(list(self.rows) + list(other.rows)))
+
+    def intersect(self, other: "RefSectionSet") -> "RefSectionSet":
+        out = []
+        for a in self.rows:
+            for b in other.rows:
+                i = _row_intersect(a, b)
+                if not _row_empty(i):
+                    out.append(i)
+        return RefSectionSet(_canonicalize(out))
+
+    def subtract(self, other: "RefSectionSet") -> "RefSectionSet":
+        rem = list(self.rows)
+        for b in other.rows:
+            rem = [piece for r in rem for piece in _row_subtract(r, b)]
+        return RefSectionSet(_canonicalize(rem))
+
+
+_REF_EMPTY = RefSectionSet(())
+
+
+def from_live(ss) -> RefSectionSet:
+    """Convert a live (vectorized) SectionSet; both canonical forms are
+    identical, so this is a plain re-tupling, not a re-canonicalize."""
+    return RefSectionSet(tuple(b.bounds for b in ss.boxes))
+
+
+# -- dense coherence state (pre-PR HDArray) ----------------------------
+class RefArray:
+    def __init__(self, name: str, shape, itemsize: int, nproc: int):
+        self.name = name
+        self.shape = tuple(int(s) for s in shape)
+        self.itemsize = itemsize
+        self.nproc = nproc
+        self.sgdef = [[_REF_EMPTY for _ in range(nproc)] for _ in range(nproc)]
+        self.valid = [_REF_EMPTY for _ in range(nproc)]
+        self.events: list = []
+
+    def record_write(self, per_device: Sequence[RefSectionSet]) -> None:
+        for p in range(self.nproc):
+            w = per_device[p]
+            if w.is_empty():
+                continue
+            self.valid[p] = self.valid[p].union(w)
+            for q in range(self.nproc):
+                if q != p:
+                    self.sgdef[p][q] = self.sgdef[p][q].union(w)
+                    self.sgdef[q][p] = self.sgdef[q][p].subtract(w)
+                    self.valid[q] = self.valid[q].subtract(w)
+        self.events.append(("write", len(self.events)))
+
+    def apply_messages_and_defs(self, send, ldef) -> None:
+        for (p, q), msg in send.items():
+            if not msg.is_empty():
+                self.sgdef[p][q] = self.sgdef[p][q].subtract(msg)
+                self.valid[q] = self.valid[q].union(msg)
+        for p in range(self.nproc):
+            d = ldef[p]
+            if d.is_empty():
+                continue
+            self.valid[p] = self.valid[p].union(d)
+            for q in range(self.nproc):
+                if q != p:
+                    self.sgdef[p][q] = self.sgdef[p][q].union(d)
+                    self.sgdef[q][p] = self.sgdef[q][p].subtract(d)
+                    self.valid[q] = self.valid[q].subtract(d)
+
+
+# -- pre-PR planner (dense O(P²) loops + §4.2 two-step cache) ----------
+@dataclass
+class RefPlanStats:
+    plans_computed: int = 0
+    hits_history: int = 0
+    hits_state_compare: int = 0
+    intersect_ops: int = 0
+
+
+@dataclass
+class _RefCacheEntry:
+    messages: Dict[str, Dict[Tuple[int, int], RefSectionSet]]
+    kinds: Dict[str, str]
+    nbytes: Dict[str, int]
+    luse: Dict[str, Tuple[RefSectionSet, ...]]
+    ldef: Dict[str, Tuple[RefSectionSet, ...]]
+    snapshots: Dict[str, tuple]
+    access_sig: tuple
+    event_marks: Dict[str, int]
+    last_period: Optional[dict] = None
+    fixpoint_verified: bool = False
+
+
+def _ref_classify(messages, nproc: int, part) -> str:
+    """Mirror of the live geometry-aware classify over ref messages
+    (classification itself was never the O(P²) bottleneck)."""
+    live = {pq: m for pq, m in messages.items() if not m.is_empty()}
+    if not live:
+        return "none"
+    fanouts: Dict[int, set] = {}
+    for (p, q) in live:
+        fanouts.setdefault(p, set()).add(q)
+    if all(len(v) == nproc - 1 for v in fanouts.values()):
+        per_src: dict = {}
+        uniform = True
+        for (p, _q), m in live.items():
+            if p in per_src and per_src[p] != m:
+                uniform = False
+                break
+            per_src[p] = m
+        if uniform:
+            return "all_gather"
+        if len(fanouts) == nproc:
+            return "all_to_all"
+    if all(part.adjacent(p, q) for (p, q) in live):
+        return "halo"
+    return "p2p"
+
+
+class RefPlanner:
+    """plan+commit with the pre-PR all-pairs loops."""
+
+    def __init__(self) -> None:
+        self.stats = RefPlanStats()
+        self._cache: Dict[tuple, _RefCacheEntry] = {}
+
+    @staticmethod
+    def _luse_of(access, part, arr: RefArray, p: int) -> RefSectionSet:
+        from .offsets import AbsoluteSpec
+        if access is None:
+            return _REF_EMPTY
+        if isinstance(access, AbsoluteSpec):
+            return from_live(access.sections_for(p))
+        return from_live(access.sections(part.region(p), arr.shape))
+
+    def plan_and_commit(self, kernel: str, part, arrays: Sequence[RefArray],
+                        uses: dict, defs: dict):
+        key = (kernel, part.part_id)
+        access_sig = tuple((a.name, hash(uses.get(a.name)),
+                            hash(defs.get(a.name))) for a in arrays)
+        nproc = part.nproc
+        entry = self._cache.get(key)
+        hit = False
+        if entry is not None and entry.access_sig == access_sig:
+            period = {a.name: tuple(a.events[entry.event_marks[a.name]:])
+                      for a in arrays}
+            if (entry.fixpoint_verified and entry.last_period is not None
+                    and period == entry.last_period):
+                self.stats.hits_history += 1
+                hit = True
+            elif all(self._snapshot_equal(entry.snapshots[a.name], a)
+                     for a in arrays):
+                self.stats.hits_state_compare += 1
+                entry.fixpoint_verified = True
+                hit = True
+            if hit:
+                entry.event_marks = {a.name: len(a.events) for a in arrays}
+                entry.last_period = period
+        if not hit:
+            messages: dict = {}
+            kinds: dict = {}
+            nbytes: dict = {}
+            luse_all: dict = {}
+            ldef_all: dict = {}
+            for a in arrays:
+                use = uses.get(a.name)
+                dfn = defs.get(a.name)
+                luse = tuple(self._luse_of(use, part, a, p) for p in range(nproc))
+                ldef = tuple(self._luse_of(dfn, part, a, p) for p in range(nproc))
+                msgs: dict = {}
+                nb = 0
+                if use is not None:
+                    for p in range(nproc):
+                        for q in range(nproc):
+                            if p == q:
+                                continue
+                            m = a.sgdef[p][q].intersect(luse[q])
+                            self.stats.intersect_ops += 1
+                            if not m.is_empty():
+                                msgs[(p, q)] = m
+                                nb += m.volume() * a.itemsize
+                messages[a.name] = msgs
+                kinds[a.name] = _ref_classify(msgs, nproc, part)
+                nbytes[a.name] = nb
+                luse_all[a.name] = luse
+                ldef_all[a.name] = ldef
+            self.stats.plans_computed += 1
+            entry = _RefCacheEntry(
+                messages=messages, kinds=kinds, nbytes=nbytes,
+                luse=luse_all, ldef=ldef_all,
+                snapshots={a.name: self._snapshot(a) for a in arrays},
+                access_sig=access_sig,
+                event_marks={a.name: len(a.events) for a in arrays},
+            )
+            self._cache[key] = entry
+        # commit (always runs, cached or not — pre-PR behavior)
+        for a in arrays:
+            a.apply_messages_and_defs(entry.messages[a.name],
+                                      entry.ldef[a.name])
+            a.events.append((kernel, part.part_id, a.name))
+        return entry
+
+    @staticmethod
+    def _snapshot(a: RefArray) -> tuple:
+        return tuple(tuple(row) for row in a.sgdef)
+
+    @staticmethod
+    def _snapshot_equal(snap: tuple, a: RefArray) -> bool:
+        for p in range(a.nproc):
+            row_s, row_a = snap[p], a.sgdef[p]
+            for q in range(a.nproc):
+                s, c = row_s[q], row_a[q]
+                if s is c:
+                    continue
+                if s != c:
+                    return False
+        return True
+
+
+# -- cross-implementation comparison -----------------------------------
+def live_plan_signature(plan) -> dict:
+    """Normalize a live CommPlan for comparison with a ref entry."""
+    out = {}
+    for ap in plan.arrays:
+        msgs = tuple(sorted(
+            (pq, tuple(b.bounds for b in m))
+            for pq, m in ap.messages.items() if not m.is_empty()))
+        out[ap.array] = (ap.kind.value, ap.bytes_total, msgs)
+    return out
+
+
+def ref_plan_signature(entry: _RefCacheEntry) -> dict:
+    out = {}
+    for name, msgs in entry.messages.items():
+        sig = tuple(sorted((pq, m.rows) for pq, m in msgs.items()
+                           if not m.is_empty()))
+        out[name] = (entry.kinds[name], entry.nbytes[name], sig)
+    return out
+
+
+def live_gdef_signature(a) -> dict:
+    """Live HDArray sGDEF as {(p,q): rows} over nonempty entries."""
+    out = {}
+    for p in range(a.nproc):
+        for q in range(a.nproc):
+            if p == q:
+                continue
+            e = a.sgdef[p][q]
+            if not e.is_empty():
+                out[(p, q)] = tuple(b.bounds for b in e.boxes)
+    return out
+
+
+def ref_gdef_signature(a: RefArray) -> dict:
+    out = {}
+    for p in range(a.nproc):
+        for q in range(a.nproc):
+            if p == q:
+                continue
+            e = a.sgdef[p][q]
+            if not e.is_empty():
+                out[(p, q)] = e.rows
+    return out

@@ -70,21 +70,36 @@ class CollectiveOp:
         return f"p2p[{self.axis}] ({self.bytes_total} B)"
 
 
-def _infer_halo_widths(ap: ArrayCommPlan, nproc: int) -> Tuple[int, Tuple[int, int]]:
-    """For a HALO plan find the array dim and (backward, forward) widths."""
+def _halo_1d_structure(ap: ArrayCommPlan
+                       ) -> Optional[Tuple[int, Tuple[int, int]]]:
+    """``(dim, (backward, forward) widths)`` when the plan's messages
+    form the 1-D rank-adjacent halo the single-op descriptor can
+    express — every pair |src-dst| == 1 and every box thin in the same
+    dim.  Geometry-aware classify() also marks block-grid, diagonal and
+    wraparound exchanges as HALO; those cannot be described by one
+    (dim, widths) pair and return None, falling through to the
+    permutation-round (P2P) descriptor — which is how the JAX executor
+    lowers them anyway."""
+    dim: Optional[int] = None
     neg = pos = 0
-    dim = 0
     for (src, dst), secs in ap.messages.items():
+        if abs(src - dst) != 1:
+            return None
         for box in secs:
             widths = box.shape()
             # the exchanged dim is the one much smaller than the others
             d = int(np.argmin(widths)) if box.ndim > 1 else 0
-            dim = d
+            if dim is None:
+                dim = d
+            elif d != dim:
+                return None
             w = widths[d]
             if dst == src + 1:
                 pos = max(pos, w)
             else:
                 neg = max(neg, w)
+    if dim is None:
+        return None
     return dim, (neg, pos)
 
 
@@ -107,11 +122,11 @@ def lower_plan(plan: CommPlan, axis: str = "x") -> List[CollectiveOp]:
     """Classify each array's messages into one TPU collective op."""
     out: List[CollectiveOp] = []
     for ap in plan.arrays:
-        nproc = len(ap.luse)
         if ap.kind == CommKind.NONE or not ap.messages:
             out.append(CollectiveOp(CommKind.NONE, ap.array, axis, 0))
-        elif ap.kind == CommKind.HALO:
-            dim, widths = _infer_halo_widths(ap, nproc)
+        elif (ap.kind == CommKind.HALO
+                and (halo := _halo_1d_structure(ap)) is not None):
+            dim, widths = halo
             out.append(CollectiveOp(CommKind.HALO, ap.array, axis,
                                     ap.bytes_total, halo_widths=widths, dim=dim))
         elif ap.kind == CommKind.ALL_GATHER:

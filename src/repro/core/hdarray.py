@@ -13,17 +13,22 @@ matrix and expose the other as a view.  The update equations (3) and
 (4) collapse to a single update of the stored matrix; the planner
 applies them verbatim.
 
+The stored matrix is a :class:`repro.core.gdef.SparseGDEF`: row-
+factored (one default set per row + per-column exceptions) with a
+conservative bounding-box index, so the dense-looking updates below
+cost O(live entries), not O(P²) — the scaling fix for the paper's
+host-side overhead at large P.  ``sgdef[p][q]`` indexing is unchanged.
+
 ``valid[p]`` tracks which sections device p currently holds an
 up-to-date copy of (for HDArrayRead and reductions).
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
+from .gdef import SparseGDEF, TrackedSections
 from .sections import Box, SectionSet
 
 
@@ -36,9 +41,9 @@ class HDArray:
         nd = len(self.shape)
         empty = SectionSet.empty(nd)
         # sgdef[p][q]: written by p, not yet sent to q   (q != p)
-        self.sgdef: list = [[empty for _ in range(nproc)] for _ in range(nproc)]
+        self.sgdef = SparseGDEF(nproc, nd)
         # valid[p]: sections p holds an up-to-date copy of
-        self.valid: list = [empty for _ in range(nproc)]
+        self.valid = TrackedSections([empty] * nproc, nd)
         # event log for the planner's history buffers (paper §4.2):
         # one content-hash per write/commit that touched this array
         self.events: list = []
@@ -64,6 +69,23 @@ class HDArray:
         return n
 
     # -- state transitions ----------------------------------------------
+    def _supersede(self, p: int, w: SectionSet) -> None:
+        """p's new definition of `w` invalidates every other device's
+        pending/valid copies there.  Equivalent to the dense
+
+            for q != p: sgdef[p][q] |= w ; sgdef[q][p] -= w ; valid[q] -= w
+
+        but row-factored + bbox-pruned: O(1 + overlapping devices)."""
+        g = self.sgdef
+        g.union_into_row(p, w)
+        lo, hi = w.bbox_bounds()
+        for q in g.rows_overlapping(lo, hi):
+            if q != p:
+                g.subtract_at(int(q), p, w)
+        for q in self.valid.overlapping(lo, hi):
+            if q != p:
+                self.valid.subtract_at(int(q), w)
+
     def record_write(self, per_device: Tuple[SectionSet, ...]) -> None:
         """HDArrayWrite: user data distributed so device p's copy of
         per_device[p] becomes the coherent one."""
@@ -71,13 +93,8 @@ class HDArray:
             w = per_device[p]
             if w.is_empty():
                 continue
-            self.valid[p] = self.valid[p].union(w)
-            for q in range(self.nproc):
-                if q != p:
-                    self.sgdef[p][q] = self.sgdef[p][q].union(w)
-                    # p's write supersedes anything q previously owned there
-                    self.sgdef[q][p] = self.sgdef[q][p].subtract(w)
-                    self.valid[q] = self.valid[q].subtract(w)
+            self.valid.union_at(p, w)
+            self._supersede(p, w)
         self.events.append(hash(("write", per_device)))
 
     def apply_messages_and_defs(
@@ -93,18 +110,14 @@ class HDArray:
         # (4) is the mirrored update of the same stored matrix.
         for (p, q), msg in send.items():
             if not msg.is_empty():
-                self.sgdef[p][q] = self.sgdef[p][q].subtract(msg)
-                self.valid[q] = self.valid[q].union(msg)  # q received a copy
+                self.sgdef.subtract_at(p, q, msg)
+                self.valid.union_at(q, msg)  # q received a copy
         for p in range(self.nproc):
             d = ldef[p]
             if d.is_empty():
                 continue
-            self.valid[p] = self.valid[p].union(d)
-            for q in range(self.nproc):
-                if q != p:
-                    self.sgdef[p][q] = self.sgdef[p][q].union(d)
-                    self.sgdef[q][p] = self.sgdef[q][p].subtract(d)
-                    self.valid[q] = self.valid[q].subtract(d)
+            self.valid.union_at(p, d)
+            self._supersede(p, d)
 
     # -- introspection ---------------------------------------------------
     def owners_of(self, box: Box) -> list:

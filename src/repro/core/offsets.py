@@ -45,7 +45,7 @@ class AccessSpec:
         nd = len(array_shape)
         if work_region.is_empty():
             return SectionSet.empty(nd)
-        out = SectionSet.empty(nd)
+        boxes = []
         for off in self.offsets:
             assert len(off) == nd, (off, array_shape)
             bounds = []
@@ -59,8 +59,9 @@ class AccessSpec:
                     bounds.append((lo + int(o), hi + int(o)))
             box = Box(tuple(bounds)).clamp(array_shape)
             if not box.is_empty():
-                out = out.union(SectionSet.of(box))
-        return out
+                boxes.append(box)
+        # one batched canonicalize instead of a union per offset tuple
+        return SectionSet.of(*boxes) if boxes else SectionSet.empty(nd)
 
 
 # Common clauses ------------------------------------------------------
@@ -112,17 +113,12 @@ def trapezoid(nproc: int, n: int, upper: bool = True) -> Tuple[SectionSet, ...]:
     rows = _even_splits(n, nproc)
     out = []
     for (lo, hi) in rows:
-        boxes = []
-        for r in range(lo, hi):
-            if upper:
-                boxes.append(Box.make((r, r + 1), (r, n)))
-            else:
-                boxes.append(Box.make((r, r + 1), (0, r + 1)))
-        s = SectionSet(())
-        for b in boxes:
-            if not b.is_empty():
-                s = s.union(SectionSet.of(b))
-        out.append(s)
+        if upper:
+            boxes = [Box.make((r, r + 1), (r, n)) for r in range(lo, hi)]
+        else:
+            boxes = [Box.make((r, r + 1), (0, r + 1)) for r in range(lo, hi)]
+        # one batched canonicalize instead of a union per row
+        out.append(SectionSet.of(*boxes))
     return tuple(out)
 
 

@@ -59,6 +59,30 @@ class Partition:
         b = self.regions[p]
         return SectionSet.of(b) if not b.is_empty() else SectionSet.empty(len(self.domain))
 
+    def adjacent(self, p: int, q: int, periodic: bool = True) -> bool:
+        """True when p's and q's work regions touch — share a face,
+        edge or corner (2-D block-grid neighbors included), optionally
+        also across a domain wraparound.  The wrap shift is chosen per
+        dimension (torus adjacency), so diagonally-opposite corners of
+        a periodic block grid count too.  This is the geometry behind
+        HALO classification: a stencil exchange only ever pairs devices
+        whose regions abut, whatever the rank numbering."""
+        if p == q:
+            return False
+        a, b = self.regions[p], self.regions[q]
+        if a.is_empty() or b.is_empty():
+            return False
+        for d, ((alo, ahi), (blo, bhi)) in enumerate(zip(a.bounds, b.bounds)):
+            if alo <= bhi and blo <= ahi:  # touch or overlap directly
+                continue
+            if periodic and d < len(self.domain):
+                ext = self.domain[d]
+                if any(alo <= bhi + s and blo + s <= ahi
+                       for s in (-ext, ext)):
+                    continue
+            return False
+        return True
+
     # ------------------------------------------------------------------
     @staticmethod
     def row(part_id: int, domain: Sequence[int], nproc: int,

@@ -202,8 +202,8 @@ class HDArrayRuntime:
         for p in range(self.nproc):
             region = self._clip_region_to_array(part.region(p), arr)
             buf = self.executor.buffers[arr.name][p]
-            for box in region:
-                parts.append(f(buf[box.to_slices()]))
+            for sl in region.iter_slices():
+                parts.append(f(buf[sl]))
         out = parts[0]
         for v in parts[1:]:
             out = combine[op](out, v)

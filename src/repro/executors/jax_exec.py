@@ -114,7 +114,7 @@ class JaxExecutor(SimExecutor):
         msgs: List[Msg] = [
             (src, dst, box)
             for (src, dst), secs in sorted(messages.items())
-            for box in secs if not box.is_empty()
+            for box in secs  # canonical SectionSets hold no empty boxes
         ]
         if not msgs:
             return
@@ -138,11 +138,10 @@ class JaxExecutor(SimExecutor):
         for _s, d, box in msgs:
             sl = box.to_slices()
             bufs[d][sl] = out[d][sl]
-        for k, v in counts.items():
-            self.collective_counts[k] += v
-        for _s, _d, box in msgs:
             self.bytes_moved += box.volume() * arr.itemsize
             self.messages_executed += 1
+        for k, v in counts.items():
+            self.collective_counts[k] += v
 
     # -- lowering -------------------------------------------------------
     def _build_program(self, arr: "HDArray", msgs: List[Msg],

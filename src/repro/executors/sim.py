@@ -49,8 +49,7 @@ class SimExecutor:
         assert data.shape == arr.shape, (data.shape, arr.shape)
         bufs = self.buffers[arr.name]
         for p, secs in enumerate(per_device):
-            for box in secs:
-                sl = box.to_slices()
+            for sl in secs.iter_slices():
                 bufs[p][sl] = data[sl]
 
     def read(self, arr: "HDArray",
@@ -58,8 +57,7 @@ class SimExecutor:
         out = np.zeros(arr.shape, dtype=arr.dtype)
         bufs = self.buffers[arr.name]
         for p, secs in enumerate(per_device):
-            for box in secs:
-                sl = box.to_slices()
+            for sl in secs.iter_slices():
                 out[sl] = bufs[p][sl]
         return out
 
@@ -69,13 +67,16 @@ class SimExecutor:
         # `kind` (the planner's pattern classification) is unused here:
         # the sim backend executes every pattern as direct section
         # copies.  Collective-aware backends dispatch on it.
+        # Iteration goes through the SoA slice view (no Box
+        # materialization) — at P=1024 a halo step carries ~2P messages.
         bufs = self.buffers[arr.name]
+        itemsize = arr.itemsize
         for (src, dst), secs in messages.items():
-            for box in secs:
-                sl = box.to_slices()
-                bufs[dst][sl] = bufs[src][sl]
-                self.bytes_moved += box.volume() * arr.itemsize
-                self.messages_executed += 1
+            sbuf, dbuf = bufs[src], bufs[dst]
+            for sl in secs.iter_slices():
+                dbuf[sl] = sbuf[sl]
+            self.bytes_moved += secs.volume() * itemsize
+            self.messages_executed += len(secs)
 
     def run_kernel(self, kernel: Callable, part_regions: Sequence["Box"],
                    arrays: Sequence["HDArray"], **kw) -> None:

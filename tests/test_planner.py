@@ -191,6 +191,110 @@ def test_write_replicated_then_no_comm():
     assert plan.bytes_total == 0
 
 
+def test_block_grid_stencil_classifies_as_halo():
+    """A 4-pt stencil on a 4x4 BLOCK grid exchanges with grid neighbors
+    whose ranks differ by the grid stride (|p-q|=4), not 1.  The
+    geometry-aware classifier must still call that HALO (the legacy
+    |p-q|==1 test silently downgraded it to P2P)."""
+    n, P = 32, 16
+    rt = mk_rt(P)
+    part = rt.partition_block((n, n), grid=(4, 4))
+    hA, hB = rt.create("A", (n, n)), rt.create("B", (n, n))
+    rt.write(hA, np.zeros((n, n), np.float32), part)
+    rt.write(hB, np.zeros((n, n), np.float32), part)
+    four_pt = AccessSpec.of((0, -1), (0, 1), (-1, 0), (1, 0))
+    plan = rt.plan_only("jac", part, [hA, hB],
+                        uses={"B": four_pt}, defs={"A": IDENTITY_2D})
+    pb = plan.plan_for("B")
+    assert pb.bytes_total > 0
+    # vertical (|p-q|=4) grid-neighbor messages are present...
+    assert any(abs(p - q) == 4 for (p, q) in pb.messages)
+    # ...and the pattern is still recognized as a halo exchange
+    assert pb.kind == CommKind.HALO
+
+
+def test_block_grid_diagonal_stencil_is_halo():
+    """9-pt stencil adds corner neighbors (|p-q| = 3 or 5 on a 4x4
+    grid) — corners touch, so still HALO."""
+    n, P = 32, 16
+    rt = mk_rt(P)
+    part = rt.partition_block((n, n), grid=(4, 4))
+    hA, hB = rt.create("A", (n, n)), rt.create("B", (n, n))
+    rt.write(hA, np.zeros((n, n), np.float32), part)
+    rt.write(hB, np.zeros((n, n), np.float32), part)
+    nine_pt = stencil(2, radius=1, diagonal=True)
+    plan = rt.plan_only("conv", part, [hA, hB],
+                        uses={"A": nine_pt}, defs={"B": IDENTITY_2D})
+    pa = plan.plan_for("A")
+    assert pa.bytes_total > 0
+    assert any(abs(p - q) in (3, 5) for (p, q) in pa.messages)
+    assert pa.kind == CommKind.HALO
+
+
+def test_classify_wraparound_neighbors():
+    """Periodic adjacency: a ring exchange between the first and last
+    rank (regions at opposite domain ends) is HALO, not P2P."""
+    from repro.core.partition import Partition
+    from repro.core.planner import classify
+    from repro.core.sections import SectionSet as SS
+
+    n, P = 16, 4
+    part = Partition.row(0, (n, n), P)
+    ring = {}
+    for p in range(P):
+        q = (p + 1) % P
+        ring[(p, q)] = SS.of(Box.make((q * 4, q * 4 + 1), (0, n)))
+    assert classify(ring, P, part) == CommKind.HALO
+    # a rank-skipping exchange stays P2P
+    skip = {(0, 2): SS.of(Box.make((8, 9), (0, n)))}
+    assert classify(skip, P, part) == CommKind.P2P
+
+
+def test_lower_plan_block_grid_halo_decomposes_to_permutation_rounds():
+    """The single-op (dim, widths) HALO descriptor only expresses 1-D
+    rank-adjacent exchanges.  Geometry-classified block-grid halos must
+    lower as permutation rounds (P2P descriptor) — the same way the
+    JAX executor runs them — not as a bogus single-dim ppermute."""
+    from repro.core import lower_plan
+
+    n, P = 32, 16
+    rt = mk_rt(P)
+    part = rt.partition_block((n, n), grid=(4, 4))
+    hA, hB = rt.create("A", (n, n)), rt.create("B", (n, n))
+    rt.write(hA, np.zeros((n, n), np.float32), part)
+    rt.write(hB, np.zeros((n, n), np.float32), part)
+    four_pt = AccessSpec.of((0, -1), (0, 1), (-1, 0), (1, 0))
+    plan = rt.plan_only("jac", part, [hA, hB],
+                        uses={"B": four_pt}, defs={"A": IDENTITY_2D})
+    pb = plan.plan_for("B")
+    assert pb.kind == CommKind.HALO
+    op = {o.array: o for o in lower_plan(plan)}["B"]
+    assert op.kind == CommKind.P2P
+    assert op.bytes_total == pb.bytes_total
+
+    # ...while the 1-D row-partition halo keeps the single-op form
+    rt2 = mk_rt(4)
+    p2 = rt2.partition_row((40, 40))
+    hC, hD = rt2.create("C", (40, 40)), rt2.create("D", (40, 40))
+    rt2.write(hC, np.zeros((40, 40), np.float32), p2)
+    rt2.write(hD, np.zeros((40, 40), np.float32), p2)
+    plan2 = rt2.plan_only("jac", p2, [hC, hD],
+                          uses={"D": four_pt}, defs={"C": IDENTITY_2D})
+    op2 = {o.array: o for o in lower_plan(plan2)}["D"]
+    assert op2.kind == CommKind.HALO
+    assert op2.dim == 0 and op2.halo_widths == (1, 1)
+
+
+def test_classify_without_partition_falls_back_to_rank_adjacency():
+    from repro.core.planner import classify
+    from repro.core.sections import SectionSet as SS
+
+    msgs = {(0, 1): SS.of(Box.make((0, 1), (0, 4))),
+            (1, 0): SS.of(Box.make((1, 2), (0, 4)))}
+    assert classify(msgs, 4) == CommKind.HALO
+    assert classify({(0, 3): SS.of(Box.make((0, 1), (0, 4)))}, 4) == CommKind.P2P
+
+
 def test_planner_stats_overhead_reduction():
     """Fig. 6/7 mechanism: repeated calls stop doing set algebra."""
     n, P = 32, 8

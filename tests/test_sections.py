@@ -115,6 +115,113 @@ def test_prop_canonical_equality(bs_a, bs_b):
     assert A == B
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.lists(boxes_2d, max_size=4),
+       st.integers(-3, 3), st.integers(-3, 3))
+def test_prop_translate_clamp_match_oracle(bs, dx, dy):
+    shape = (6, 6)
+    A = SectionSet.of(*bs)
+    got = _mask(A.translate((dx, dy)).clamp(shape), shape)
+    want = np.zeros(shape, bool)
+    for i, j in np.argwhere(_mask(A, shape)):
+        if 0 <= i + dx < shape[0] and 0 <= j + dy < shape[1]:
+            want[i + dx, j + dy] = True
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(boxes_2d, max_size=4), st.lists(boxes_2d, max_size=4))
+def test_prop_equality_iff_same_mask(bs_a, bs_b):
+    """Canonical uniqueness: SectionSet equality ⟺ point-set equality."""
+    shape = (6, 6)
+    A, B = SectionSet.of(*bs_a), SectionSet.of(*bs_b)
+    assert (A == B) == np.array_equal(_mask(A, shape), _mask(B, shape))
+    if A == B:
+        assert hash(A) == hash(B)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(boxes_2d, max_size=4))
+def test_prop_mask_roundtrip_rle(bs):
+    """The RLE mask oracle rebuilds the exact canonical set."""
+    shape = (6, 6)
+    A = SectionSet.of(*bs)
+    assert section_set_from_mask(_mask(A, shape)) == A
+
+
+# ------- seeded oracle sweep (always runs, no hypothesis needed) ------
+def test_seeded_vectorized_ops_match_oracle():
+    """Dense-mask oracle over the full op set — covers both the scalar
+    small-set kernels and the batched NumPy paths (large sets built
+    from masks exceed the small-set dispatch threshold)."""
+    rng = np.random.default_rng(7)
+    shape = (9, 8)
+
+    def rand_set(k):
+        boxes = []
+        for _ in range(k):
+            a, b = sorted(rng.integers(0, shape[0] + 1, 2))
+            c, d = sorted(rng.integers(0, shape[1] + 1, 2))
+            boxes.append(Box.make((a, b), (c, d)))
+        return SectionSet.of(*boxes)
+
+    for trial in range(300):
+        A, B = rand_set(rng.integers(0, 6)), rand_set(rng.integers(0, 6))
+        ma, mb = _mask(A, shape), _mask(B, shape)
+        assert np.array_equal(_mask(A.union(B), shape), ma | mb), trial
+        assert np.array_equal(_mask(A.intersect(B), shape), ma & mb), trial
+        assert np.array_equal(_mask(A.subtract(B), shape), ma & ~mb), trial
+        assert A.union(B) == B.union(A), trial
+        assert A.volume() == int(ma.sum()), trial
+        # scattered mask → large box count → batched kernels
+        m = rng.random(shape) < 0.45
+        S = section_set_from_mask(m)
+        assert np.array_equal(_mask(S, shape), m), trial
+        assert np.array_equal(_mask(S.union(A), shape), m | ma), trial
+        assert np.array_equal(_mask(S.subtract(A), shape), m & ~ma), trial
+        assert np.array_equal(_mask(S.intersect(A), shape), m & ma), trial
+
+
+def test_seeded_oracle_large_sets_hit_batched_path():
+    """Masks big enough that canonicalize/subtract/intersect run the
+    vectorized (n, ndim, 2) kernels, not the scalar small-set ones."""
+    rng = np.random.default_rng(3)
+    shape = (48, 24)
+    for trial in range(20):
+        m_a = rng.random(shape) < 0.45
+        m_b = rng.random(shape) < 0.45
+        A = section_set_from_mask(m_a)
+        B = section_set_from_mask(m_b)
+        assert len(A.boxes) > 32  # beyond the small-set dispatch threshold
+        assert np.array_equal(_mask(A, shape), m_a), trial
+        assert np.array_equal(_mask(A.union(B), shape), m_a | m_b), trial
+        assert np.array_equal(_mask(A.intersect(B), shape), m_a & m_b), trial
+        assert np.array_equal(_mask(A.subtract(B), shape), m_a & ~m_b), trial
+        assert A.union(B) == B.union(A), trial
+
+
+def test_seeded_oracle_1d_and_3d():
+    rng = np.random.default_rng(11)
+    for _ in range(50):
+        m1 = rng.random(23) < 0.4
+        assert np.array_equal(
+            mask_from_section_set(section_set_from_mask(m1), m1.shape), m1)
+        m3 = rng.random((4, 5, 3)) < 0.3
+        S = section_set_from_mask(m3)
+        assert np.array_equal(mask_from_section_set(S, m3.shape), m3)
+        assert S.volume() == int(m3.sum())
+
+
+def test_bounds_array_view_is_canonical_sorted():
+    s = SectionSet.of(Box.make((4, 8), (0, 2)), Box.make((0, 4), (0, 2)),
+                      Box.make((0, 4), (2, 6)))
+    arr = s.bounds_array
+    assert arr.shape[1:] == (2, 2) and arr.dtype == np.int64
+    assert [tuple(map(tuple, row)) for row in arr.tolist()] == \
+        [b.bounds for b in s.boxes]
+    assert list(s.iter_slices()) == [b.to_slices() for b in s.boxes]
+
+
 def test_translate_clamp():
     s = SectionSet.of(Box.make((0, 4), (0, 4)))
     t = s.translate((-2, 1)).clamp((4, 4))
