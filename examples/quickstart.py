@@ -71,6 +71,19 @@ def main(backend: str = "sim"):
     print(f"second call: {plan2.bytes_total} bytes (cached plan: "
           f"{plan2.cached}) — the GDEF state makes re-sends unnecessary")
 
+    # HDArrayReduce: a PLANNED kernel too — here the reduce partition
+    # (COL) deliberately mismatches C's ownership (ROW), so the planner
+    # derives the coherence messages before the local folds + the
+    # ALL_REDUCE combine tree (on "null" the value is None but the plan
+    # and its byte accounting still land in rt.comm_log).
+    p_col = rt.partition_col((n, n))
+    total = rt.reduce(hC, "sum", p_col)
+    _name, red_bytes, kinds = rt.comm_log[-1]
+    if backend != "null":
+        np.testing.assert_allclose(total, (A @ B).sum(), rtol=2e-4)
+    print(f"reduce(sum) over COL partition: {total} "
+          f"(planned {red_bytes} B: {dict((k, b) for _a, k, b in kinds)})")
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()

@@ -46,6 +46,11 @@ __all__ = [
 # ----------------------------------------------------------------------
 # TPU collective lowering
 # ----------------------------------------------------------------------
+# CommKind.ALL_REDUCE -> the psum-family collective a pod would issue
+REDUCE_COLLECTIVES = {"sum": "psum", "prod": "pprod",
+                      "max": "pmax", "min": "pmin"}
+
+
 @dataclass(frozen=True)
 class CollectiveOp:
     """One lowered communication op along a named mesh axis."""
@@ -56,8 +61,13 @@ class CollectiveOp:
     # HALO: (neg_width, pos_width) halo element widths along `dim`
     halo_widths: Optional[Tuple[int, int]] = None
     dim: Optional[int] = None      # array dim being exchanged / gathered
+    reduce_op: Optional[str] = None  # ALL_REDUCE: sum/prod/max/min
 
     def describe(self) -> str:
+        if self.kind == CommKind.ALL_REDUCE:
+            coll = REDUCE_COLLECTIVES.get(self.reduce_op, "psum")
+            return (f"{coll}[{self.axis}] combine tree op={self.reduce_op} "
+                    f"({self.bytes_total} B)")
         if self.kind == CommKind.HALO:
             return (f"ppermute[{self.axis}] halo dim={self.dim} "
                     f"widths={self.halo_widths} ({self.bytes_total} B)")
@@ -122,7 +132,12 @@ def lower_plan(plan: CommPlan, axis: str = "x") -> List[CollectiveOp]:
     """Classify each array's messages into one TPU collective op."""
     out: List[CollectiveOp] = []
     for ap in plan.arrays:
-        if ap.kind == CommKind.NONE or not ap.messages:
+        if ap.kind == CommKind.ALL_REDUCE:
+            # the combine tree moves per-device partials, not sections,
+            # so it is described before the empty-messages early-out
+            out.append(CollectiveOp(CommKind.ALL_REDUCE, ap.array, axis,
+                                    ap.bytes_total, reduce_op=ap.reduce_op))
+        elif ap.kind == CommKind.NONE or not ap.messages:
             out.append(CollectiveOp(CommKind.NONE, ap.array, axis, 0))
         elif (ap.kind == CommKind.HALO
                 and (halo := _halo_1d_structure(ap)) is not None):

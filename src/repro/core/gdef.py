@@ -196,6 +196,16 @@ class SparseGDEF:
         self._default[p] = best
         self._exc[p] = {q: ss for q, ss in exc.items() if not (ss == best)}
 
+    def clear(self) -> None:
+        """Empty every entry in place (a full replicated write
+        supersedes all pending sends: nothing remains to deliver)."""
+        self._default = [self._empty] * self.nproc
+        self._exc = [dict() for _ in range(self.nproc)]
+        self._lo.fill(0)
+        self._hi.fill(0)
+        self._live.fill(False)
+        self._exc_churn = [0] * self.nproc
+
     # -- full-state capture (planner commit replay) --------------------
     def capture(self) -> tuple:
         """Immutable capture of the complete store, bbox index included

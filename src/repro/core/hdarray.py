@@ -97,6 +97,17 @@ class HDArray:
             self._supersede(p, w)
         self.events.append(hash(("write", per_device)))
 
+    def record_replicated(self) -> None:
+        """A full replicated write: every device now holds the coherent
+        copy of the whole array, so every pending send is superseded —
+        the entire sGDEF empties (leaving entries behind would replay
+        stale pre-replication sections into later plans)."""
+        full = SectionSet.full(self.shape)
+        for p in range(self.nproc):
+            self.valid[p] = full
+        self.sgdef.clear()
+        self.events.append(hash(("write_replicated", self.name)))
+
     def apply_messages_and_defs(
         self,
         send: Dict[Tuple[int, int], SectionSet],

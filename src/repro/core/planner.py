@@ -56,6 +56,7 @@ class CommKind(enum.Enum):
     HALO = "halo"                   # neighbor-only exchange (stencils)
     ALL_TO_ALL = "all_to_all"       # balanced permutation
     P2P = "p2p"                     # irregular point-to-point
+    ALL_REDUCE = "all_reduce"       # global combine of per-device partials
 
 
 @dataclass
@@ -66,6 +67,11 @@ class ArrayCommPlan:
     bytes_total: int
     luse: Tuple[SectionSet, ...]
     ldef: Tuple[SectionSet, ...]
+    # ALL_REDUCE only: which combine ("sum"/"prod"/"max"/"min") the
+    # global phase applies to the per-device partials.  The combine tree
+    # carries no array sections, so `messages` stays empty and
+    # `bytes_total` is the partial-value traffic of the tree.
+    reduce_op: Optional[str] = None
 
     @property
     def n_messages(self) -> int:

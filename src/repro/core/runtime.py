@@ -7,7 +7,9 @@ Mirrors the paper's library:
   HDArrayPartition         -> rt.partition_row/col/block/manual(...)
   HDArrayWrite / Read      -> rt.write / rt.read
   HDArrayApplyKernel       -> rt.apply_kernel(...)
-  HDArrayReduce            -> rt.reduce(...)
+  HDArrayReduce            -> rt.reduce(...)  (a planned kernel:
+                              coherence messages via Eqns (1)-(2),
+                              executor local fold, ALL_REDUCE combine)
   HDArraySetAbsoluteUse/Def-> AbsoluteSpec arguments to apply_kernel
   HDArraySetTrapezoidUse/..-> offsets.trapezoid(...) helper
   (repartition at any point: just pass a different partition id —
@@ -45,8 +47,13 @@ from .comm import lower_plan
 from .hdarray import HDArray
 from .offsets import AbsoluteSpec, AccessSpec
 from .partition import Box, Partition, PartitionTable
-from .planner import Access, CommPlan, Planner
+from .planner import Access, ArrayCommPlan, CommKind, CommPlan, Planner
 from .sections import SectionSet
+
+# identity elements for reductions over an empty domain (max/min have
+# none — an empty max/min is a caller error, not a value)
+_REDUCE_IDENTITY = {"sum": 0, "prod": 1}
+REDUCE_OPS = ("sum", "prod", "max", "min")
 
 
 class HDArrayRuntime:
@@ -110,12 +117,11 @@ class HDArrayRuntime:
 
     def write_replicated(self, arr: HDArray, data: np.ndarray) -> None:
         """Give every device a full coherent copy (no comm ever needed
-        until someone redefines a section)."""
+        until someone redefines a section).  Supersedes every pending
+        send: the whole sGDEF empties (see `HDArray.record_replicated`)."""
         full = SectionSet.full(arr.shape)
         self.executor.write(arr, data, tuple(full for _ in range(self.nproc)))
-        for p in range(self.nproc):
-            arr.valid[p] = full
-        arr.events.append(hash(("write_replicated", arr.name)))
+        arr.record_replicated()
 
     def read(self, arr: HDArray, part_id: int) -> np.ndarray:
         part = self.parts[part_id]
@@ -191,32 +197,115 @@ class HDArrayRuntime:
 
     # -- reductions ---------------------------------------------------------
     def reduce(self, arr: HDArray, op: str, part_id: int):
-        """Paper HDArrayReduce: local (device) reduction then global
-        combine.  Ops: sum/prod/max/min."""
+        """Paper HDArrayReduce: a *planned* kernel — Eqns (1)-(2) derive
+        the messages that make each device's reduce-partition region
+        coherent (a reduce is a USE of those regions), the executor's
+        local phase folds each region, and the ALL_REDUCE combine tree
+        merges the per-device partials.  Ops: sum/prod/max/min.
+
+        Semantics: each device folds its own (clipped) partition
+        region, so elements covered by several regions of an
+        OVERLAPPING manual partition are folded once per owner —
+        partitions are work assignments, and the reduce is the fold of
+        all assigned work.  An empty domain yields the op's identity
+        for sum/prod and raises ValueError for max/min (no identity
+        exists).  On the metadata-only ``"null"`` backend the value is
+        None — except the empty-domain identity, which is pure
+        metadata — while the plan and its byte accounting still land
+        in ``comm_log``.
+        """
+        if op not in REDUCE_OPS:
+            raise ValueError(f"unknown reduce op {op!r}; one of {REDUCE_OPS}")
         part = self.parts[part_id]
-        fns = {"sum": np.sum, "prod": np.prod, "max": np.max, "min": np.min}
-        combine = {"sum": np.add, "prod": np.multiply,
-                   "max": np.maximum, "min": np.minimum}
-        f = fns[op]
-        parts = []
-        for p in range(self.nproc):
-            region = self._clip_region_to_array(part.region(p), arr)
-            buf = self.executor.buffers[arr.name][p]
-            for sl in region.iter_slices():
-                parts.append(f(buf[sl]))
-        out = parts[0]
-        for v in parts[1:]:
-            out = combine[op](out, v)
+        per_device = tuple(
+            self._clip_region_to_array(part.region(p), arr)
+            for p in range(self.nproc)
+        )
+        log_name = f"__reduce[{op}]_{arr.name}"
+        if all(s.is_empty() for s in per_device):
+            if op in ("max", "min"):
+                raise ValueError(
+                    f"reduce({op!r}) over an empty domain: partition "
+                    f"{part_id} clips to no elements of {arr.name!r}")
+            out = arr.dtype.type(_REDUCE_IDENTITY[op])
+            self.log_plan(log_name, CommPlan(log_name, part.part_id, [
+                self._reduce_ap(arr, per_device, op)]))
+            return out
+        # (1)-(2): the reduce USES the identity sections of its work
+        # partition — the planner derives exactly the messages that make
+        # each device's region coherent before the local fold.  The plan
+        # name is shared across ops (the coherence requirement is
+        # op-independent) so the §4.2 cache stays hot; only the log
+        # entry carries the op.
+        ident = AccessSpec.of(tuple(0 for _ in arr.shape))
+        uses = {arr.name: ident}
+        plan = self.planner.plan(f"__reduce_{arr.name}", part, [arr],
+                                 uses, {})
+        if self._scheduler is not None:
+            # messages ∥ Eqn (3)-(4) commit, like any apply_kernel step;
+            # the local fold (below) only starts once the data landed
+            self._scheduler.step(
+                plan, part, None, [arr], self.arrays, uses, {}, {},
+                commit=lambda: self.planner.commit(plan, [arr], part))
+        else:
+            for ap in plan.arrays:
+                if ap.messages:
+                    self.executor.execute_messages(
+                        arr, ap.messages, kind=ap.kind)
+            self.planner.commit(plan, [arr], part)
+        partials = self.executor.reduce_local(arr, per_device, op)
+        out = self.executor.reduce_combine(partials, op, arr.dtype)
+        logged = CommPlan(log_name, part.part_id,
+                          list(plan.arrays)
+                          + [self._reduce_ap(arr, per_device, op)],
+                          cached=plan.cached)
+        self.log_plan(log_name, logged)
         return out
 
+    def _reduce_ap(self, arr: HDArray, per_device, op: str) -> ArrayCommPlan:
+        """The ALL_REDUCE leg of a reduce plan: the combine tree over
+        the live per-device partials — (live-1) partial values moved."""
+        nlive = sum(1 for s in per_device if not s.is_empty())
+        return ArrayCommPlan(
+            arr.name, {}, CommKind.ALL_REDUCE,
+            max(0, nlive - 1) * arr.itemsize,
+            tuple(per_device),
+            tuple(SectionSet.empty(arr.ndim) for _ in per_device),
+            reduce_op=op)
+
     # -- repartition (elasticity) --------------------------------------------
-    def repartition(self, arr: HDArray, old_part_id: int, new_part_id: int) -> CommPlan:
+    def repartition(self, arr: HDArray, old_part_id: Optional[int],
+                    new_part_id: int) -> CommPlan:
         """Move an array's coherent blocks from one partition to another —
         the planner derives the migration messages automatically.  This
         is the paper's 'repartition at any point' and our elasticity
         primitive (node loss/gain => new partition over fewer/more
-        devices)."""
-        from .offsets import AccessSpec
+        devices).
+
+        When ``old_part_id`` is given, the array must be coherent under
+        that partition (every element of its regions has an up-to-date
+        owner) — migrating an incoherent array would silently move
+        stale bytes.  Pass None to skip the check."""
+        if old_part_id is not None:
+            old = self.parts[old_part_id]
+            for p in range(self.nproc):
+                missing = self._clip_region_to_array(old.region(p), arr)
+                bb = missing.bbox_bounds()
+                if bb is None:
+                    continue
+                # bbox-pruned: only valid sets that can overlap this
+                # region are subtracted (O(overlapping devices), not
+                # O(P) — the repartition itself is planned the same way)
+                for q in arr.valid.overlapping(*bb):
+                    missing = missing.subtract(arr.valid[int(q)])
+                    if missing.is_empty():
+                        break
+                if not missing.is_empty():
+                    raise ValueError(
+                        f"repartition: {arr.name!r} is not coherent under "
+                        f"partition {old_part_id} — no device holds an "
+                        f"up-to-date copy of {missing} (device {p}'s "
+                        f"region)")
         ident = AccessSpec.of(tuple(0 for _ in arr.shape))
         return self.apply_kernel(
             f"__repartition_{arr.name}_{old_part_id}->{new_part_id}",

@@ -13,15 +13,23 @@ the four runtime actions the paper's library issues (§5):
   a backend can lower to the matching collective instead of emulating
   point-to-point copies,
 * ``run_kernel`` — invoke the user kernel once per device over its work
-  region, against full-size device buffers (OpenCL semantics).
+  region, against full-size device buffers (OpenCL semantics),
+* ``reduce_local`` / ``reduce_combine`` — the two phases of
+  ``HDArrayReduce``: per-device reduction of each device's (planner-
+  coherent) sections, then the global combine tree over the partials.
+  The runtime routes every reduce through the planner first, so by the
+  time ``reduce_local`` runs each device's region is up to date — no
+  backend ever reads stale buffer contents.
 
 Backends register with :func:`register_executor` and are constructed by
 name via :func:`make_executor` — the hook behind
 ``HDArrayRuntime(nproc, backend=...)``.
 
-Every executor also keeps two counters the benchmarks and tests read:
-``bytes_moved`` (payload bytes of executed messages) and
-``messages_executed`` (one per transferred box).
+Every executor also keeps three counters the benchmarks and tests
+read: ``bytes_moved`` (payload bytes of executed messages),
+``messages_executed`` (one per transferred box) and
+``reduce_elements`` (elements folded by local reductions — the flop
+accounting the metadata-only backend keeps without touching data).
 """
 from __future__ import annotations
 
@@ -43,6 +51,7 @@ class Executor(Protocol):
 
     bytes_moved: int
     messages_executed: int
+    reduce_elements: int
 
     def allocate(self, arr: "HDArray") -> None: ...
 
@@ -62,6 +71,13 @@ class Executor(Protocol):
 
     def run_kernel(self, kernel: Callable, part_regions: Sequence["Box"],
                    arrays: Sequence["HDArray"], **kw) -> None: ...
+
+    def reduce_local(self, arr: "HDArray",
+                     per_device: Sequence["SectionSet"],
+                     op: str) -> Sequence[Optional[object]]: ...
+
+    def reduce_combine(self, partials: Sequence[Optional[object]],
+                       op: str, dtype) -> Optional[object]: ...
 
 
 _REGISTRY: Dict[str, type] = {}

@@ -30,6 +30,15 @@ uniform (e.g. a non-divisible all-gather), the executor falls back to
 the permutation-round ``ppermute`` path, which handles arbitrary
 message sets; the choice is recorded in ``collective_counts``.
 
+``HDArrayReduce`` follows the same split as kernels: the local phase
+(per-device fold over that device's planner-coherent sections) runs on
+the host mirrors exactly like ``run_kernel``, and the global combine
+is a REAL collective — ``lax.psum`` / ``pmax`` / ``pmin`` (and, for
+prod, an ``all_gather`` + local fold: jax has no ``pprod`` primitive)
+over the per-rank partials inside ``shard_map``.  Combine programs are
+cached per (op, dtype, nproc) and counted in ``collective_counts``
+under the logical op name.
+
 Device buffers live as host mirrors between calls (one full-size
 numpy array per rank, exactly the Sim layout, which keeps ``write`` /
 ``read`` / ``run_kernel`` and reductions bit-identical to the oracle);
@@ -55,6 +64,18 @@ if TYPE_CHECKING:
 
 # one flattened message: (src rank, dst rank, Box)
 Msg = Tuple[int, int, Any]
+
+
+def _reduce_identity(op: str, dtype: np.dtype):
+    """The op's identity element — the fill for ranks with no partial."""
+    if op == "sum":
+        return dtype.type(0)
+    if op == "prod":
+        return dtype.type(1)
+    if np.issubdtype(dtype, np.floating):
+        return dtype.type(-np.inf) if op == "max" else dtype.type(np.inf)
+    info = np.iinfo(dtype)
+    return dtype.type(info.min) if op == "max" else dtype.type(info.max)
 
 
 def _permutation_rounds(msgs: Sequence[Msg]) -> List[List[Msg]]:
@@ -87,9 +108,11 @@ class JaxExecutor(SimExecutor):
         super().__init__(nproc=nproc)
         self.axis = axis
         # how many of each collective this executor has ISSUED (per
-        # execute_messages call, i.e. per traced collective op)
+        # execute_messages call, i.e. per traced collective op); the
+        # psum family counts reduce combines by their logical op
         self.collective_counts: Dict[str, int] = {
-            "all_gather": 0, "all_to_all": 0, "ppermute": 0}
+            "all_gather": 0, "all_to_all": 0, "ppermute": 0,
+            "psum": 0, "pprod": 0, "pmax": 0, "pmin": 0}
         self._mesh = None
         self._sharding = None
         # message-structure signature -> (jitted program, counts delta)
@@ -272,6 +295,67 @@ class JaxExecutor(SimExecutor):
             return x
 
         return step
+
+    # -- reductions -----------------------------------------------------
+    # reduce_local is inherited from SimExecutor: the local fold runs on
+    # the host mirrors, exactly like run_kernel.  Only the COMBINE —
+    # the communication — is lowered to a collective.
+    def reduce_combine(self, partials, op: str, dtype):
+        if all(v is None for v in partials):
+            return None
+        import jax
+
+        nproc = len(partials)
+        dtype = np.dtype(dtype)
+        self._ensure_mesh(nproc)
+        # ranks without a live partial contribute the op's identity
+        # (±inf / int extremes for max/min), masked out by the combine
+        vals = np.full((nproc,), _reduce_identity(op, dtype), dtype=dtype)
+        for i, v in enumerate(partials):
+            if v is not None:
+                vals[i] = v
+        key = ("__reduce__", op, dtype.str, nproc)
+        prog = self._programs.get(key)
+        if prog is None:
+            prog = self._build_reduce_program(op)
+            self._programs[key] = prog
+        fn, counts = prog
+        out = np.asarray(jax.device_get(
+            fn(jax.device_put(vals, self._sharding))))
+        for k, v in counts.items():
+            self.collective_counts[k] += v
+        return dtype.type(out[0])
+
+    def _build_reduce_program(self, op: str):
+        """One shard_map program: each rank holds its (1,) partial; the
+        psum-family collective replicates the combined value."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+        # the op -> collective-name table is shared with the symbolic
+        # lowering (function-level import: core.comm imports executors)
+        from repro.core.comm import REDUCE_COLLECTIVES
+
+        axis = self.axis
+        prims = {"sum": jax.lax.psum, "max": jax.lax.pmax,
+                 "min": jax.lax.pmin}
+
+        def body(xb):
+            v = xb[0]
+            if op == "prod":
+                # no lax.pprod primitive: all_gather + local fold is the
+                # standard lowering of the product combine tree
+                r = jnp.prod(jax.lax.all_gather(v, axis))
+            else:
+                r = prims[op](v, axis)
+            return r[None]
+
+        fn = jax.jit(compat.shard_map(
+            body, mesh=self._mesh, in_specs=P(axis), out_specs=P(axis),
+            check_vma=False))
+        return fn, {REDUCE_COLLECTIVES[op]: 1}
 
     def _lower_ppermute_round(self, arr: "HDArray", rnd: List[Msg]) -> Callable:
         import jax

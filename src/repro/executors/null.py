@@ -46,3 +46,15 @@ class NullExecutor(SimExecutor):
 
     def run_kernel(self, kernel, part_regions, arrays, **kw) -> None:
         raise RuntimeError("NullExecutor cannot run kernels")
+
+    def reduce_local(self, arr: "HDArray", per_device, op: str):
+        """Metadata-only local phase: account the elements each device
+        would fold (the reduce's flop count) and contribute no value."""
+        for secs in per_device:
+            self.reduce_elements += secs.volume()
+        return [None] * len(per_device)
+
+    def reduce_combine(self, partials, op: str, dtype):
+        # no data: the combined value is unknowable; the runtime still
+        # logged the planned coherence traffic + ALL_REDUCE byte count
+        return None

@@ -21,6 +21,11 @@ if TYPE_CHECKING:
     from repro.core.planner import CommKind
     from repro.core.sections import Box, SectionSet
 
+# local reduction / pairwise combine per HDArrayReduce op
+REDUCE_FNS = {"sum": np.sum, "prod": np.prod, "max": np.max, "min": np.min}
+REDUCE_COMBINE = {"sum": np.add, "prod": np.multiply,
+                  "max": np.maximum, "min": np.minimum}
+
 
 @register_executor("sim")
 class SimExecutor:
@@ -33,6 +38,7 @@ class SimExecutor:
         self.buffers: Dict[str, List[np.ndarray]] = {}
         self.bytes_moved: int = 0
         self.messages_executed: int = 0
+        self.reduce_elements: int = 0
 
     def allocate(self, arr: "HDArray") -> None:
         self.buffers[arr.name] = [
@@ -88,3 +94,33 @@ class SimExecutor:
                 continue
             bufs = {a.name: self.buffers[a.name][p] for a in arrays}
             kernel(region, bufs, **kw)
+
+    # -- reductions (HDArrayReduce, local phase + global combine) -------
+    def reduce_local(self, arr: "HDArray",
+                     per_device: Sequence["SectionSet"], op: str):
+        """Per-device reduction over each device's sections.  Devices
+        whose section set is empty contribute None (no identity element
+        is fabricated — max/min over nothing has none)."""
+        f = REDUCE_FNS[op]
+        comb = REDUCE_COMBINE[op]
+        bufs = self.buffers[arr.name]
+        partials: List[Optional[np.generic]] = []
+        for p, secs in enumerate(per_device):
+            acc = None
+            for sl in secs.iter_slices():
+                v = f(bufs[p][sl])
+                acc = v if acc is None else comb(acc, v)
+            self.reduce_elements += secs.volume()
+            partials.append(acc)
+        return partials
+
+    def reduce_combine(self, partials, op: str, dtype):
+        """Sequential left-fold over the live partials (rank order) —
+        the deterministic oracle every collective backend must match."""
+        comb = REDUCE_COMBINE[op]
+        out = None
+        for v in partials:
+            if v is None:
+                continue
+            out = v if out is None else comb(out, v)
+        return out if out is None else np.dtype(dtype).type(out)

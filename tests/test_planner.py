@@ -3,7 +3,7 @@ validated against the paper's own benchmark scenarios (§5.1, Table 3)."""
 import numpy as np
 import pytest
 
-from repro.core import (AccessSpec, AbsoluteSpec, Box, CommKind,
+from repro.core import (AccessSpec, AbsoluteSpec, ALL_2D, Box, CommKind,
                         HDArrayRuntime, IDENTITY_2D, ROW_ALL, COL_ALL,
                         SectionSet, stencil, trapezoid)
 
@@ -188,6 +188,27 @@ def test_write_replicated_then_no_comm():
     h = rt.create("w", (n, n))
     rt.write_replicated(h, np.ones((n, n), np.float32))
     plan = rt.plan_only("use_w", part, [h], uses={"w": ROW_ALL}, defs={})
+    assert plan.bytes_total == 0
+
+
+def test_write_replicated_supersedes_pending_sends():
+    """Invariant: after a full replicated write, NO sGDEF entry remains
+    — every pending send is superseded (every device already holds the
+    coherent copy).  The regression: a partitioned write before the
+    replication left its entries behind, and a later plan replayed
+    those stale sections as traffic."""
+    n, P = 8, 4
+    rt = mk_rt(P)
+    part = rt.partition_row((n, n))
+    h = rt.create("w", (n, n))
+    rt.write(h, np.zeros((n, n), np.float32), part)   # populates sGDEF
+    assert any(not e.is_empty() for _p, _q, e in h.sgdef.live_items())
+    rt.write_replicated(h, np.ones((n, n), np.float32))
+    assert not list(h.sgdef.live_items())              # all superseded
+    for p in range(P):
+        assert h.valid[p] == SectionSet.full((n, n))
+    # and the planner agrees: a fully-replicated use plans zero traffic
+    plan = rt.plan_only("use_w", part, [h], uses={"w": ALL_2D}, defs={})
     assert plan.bytes_total == 0
 
 

@@ -1,0 +1,304 @@
+"""Planned reductions: HDArrayReduce routed through the planner and
+the Executor protocol.
+
+The regression this file pins down: ``reduce()`` used to reach
+straight into ``executor.buffers`` and fold whatever bytes sat there —
+silently wrong whenever the reduce partition didn't match data
+ownership, a TypeError on the bufferless null backend, and an
+IndexError on an all-empty domain.  A reduce is now just another
+planned kernel: Eqns (1)-(2) derive the coherence messages, the
+executor's local phase folds each device's region, and an ALL_REDUCE
+combine tree merges the partials — logged in ``comm_log`` like any
+``apply_kernel``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Box, CommKind, HDArrayRuntime, lower_plan
+
+OPS = ("sum", "prod", "max", "min")
+
+
+def _need_devices(n):
+    import jax
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} host devices (XLA_FLAGS not applied?)")
+
+
+def _oracle(X, op):
+    return {"sum": X.sum, "prod": X.prod, "max": X.max, "min": X.min}[op]()
+
+
+def _partition(rt, kind, shape):
+    n = shape[0]
+    if kind == "row":
+        return rt.partition_row(shape)
+    if kind == "col":
+        return rt.partition_col(shape)
+    if kind == "block":
+        return rt.partition_block(shape)
+    # manual: uneven rows + (when P > 1) one device with no work
+    P = rt.nproc
+    if P == 1:
+        return rt.partition_manual(shape, [Box.make((0, n), (0, n))])
+    cuts = np.linspace(0, n, P, dtype=int)
+    regions = [Box.make((int(cuts[i]), int(cuts[i + 1])), (0, n))
+               for i in range(P - 1)]
+    regions.append(Box.make((0, 0), (0, n)))   # empty region
+    return rt.partition_manual(shape, regions)
+
+
+def _data(n, op="sum"):
+    """float32 data whose reduction is EXACT under any combine order —
+    sum/max/min: small integers; prod: powers of two (exact mantissa,
+    bounded exponent) — so backend parity can demand bit-identity."""
+    if op == "prod":
+        X = np.ones((n, n), np.float32)
+        X.flat[::7] = 2.0
+        X.flat[3::11] = 0.5
+        return X
+    return (np.arange(n * n, dtype=np.float32).reshape(n, n) % 3 + 1)
+
+
+# ----------------------------------------------------------------------
+# sim vs the single-process numpy oracle
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("ptype", ["row", "col", "block", "manual"])
+@pytest.mark.parametrize("nproc", [1, 3, 4])
+def test_sim_reduce_matches_numpy(nproc, ptype, op):
+    n = 12
+    X = _data(n, op)
+    rt = HDArrayRuntime(nproc)
+    p_own = rt.partition_row((n, n))      # data ownership: ROW
+    p_red = _partition(rt, ptype, (n, n))  # reduce partition: may differ
+    h = rt.create("x", (n, n))
+    rt.write(h, X, p_own)
+    assert rt.reduce(h, op, p_red) == _oracle(X, op)
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_reduce_ownership_mismatch_is_coherent(op):
+    """THE stale-read probe: data owned under ROW, reduced under COL.
+    Without planned coherence messages the old code returned the fold
+    of uninitialized buffer regions (1.0 instead of 6.0)."""
+    X = np.array([[1.0, 2.0], [3.0, 1.0]], np.float32)
+    rt = HDArrayRuntime(2)
+    p_row = rt.partition_row((2, 2))
+    p_col = rt.partition_col((2, 2))
+    h = rt.create("x", (2, 2))
+    rt.write(h, X, p_row)
+    assert rt.reduce(h, op, p_col) == _oracle(X, op)
+    # the coherence traffic was planned, not guessed: messages moved
+    name, nbytes, kinds = rt.comm_log[-1]
+    assert name == f"__reduce[{op}]_x"
+    assert nbytes > 0
+
+
+def test_reduce_after_kernel_defs():
+    """Reduce sees kernel-defined values, not the written seed."""
+    n, P = 16, 4
+    from repro.core import IDENTITY_2D
+    X = np.arange(n * n, dtype=np.float32).reshape(n, n)
+    rt = HDArrayRuntime(P)
+    part = rt.partition_row((n, n))
+    h = rt.create("x", (n, n))
+    rt.write(h, X, part)
+
+    def double(region, bufs):
+        sl = region.to_slices()
+        bufs["x"][sl] = 2 * bufs["x"][sl]
+
+    rt.apply_kernel("double", part, double, [h],
+                    uses={"x": IDENTITY_2D}, defs={"x": IDENTITY_2D})
+    # reduce under a DIFFERENT partition: must see the doubled values
+    p_col = rt.partition_col((n, n))
+    assert rt.reduce(h, "sum", p_col) == (2 * X).sum()
+
+
+# ----------------------------------------------------------------------
+# jax backend: local fold + real collective combine, bit-identical
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("ptype", ["row", "col", "block", "manual"])
+def test_jax_reduce_bit_identical_to_sim(ptype, op):
+    nproc, n = 4, 12
+    _need_devices(nproc)
+    X = _data(n, op)
+
+    def run(backend):
+        rt = HDArrayRuntime(nproc, backend=backend)
+        p_own = rt.partition_row((n, n))
+        p_red = _partition(rt, ptype, (n, n))
+        h = rt.create("x", (n, n))
+        rt.write(h, X, p_own)
+        return rt.reduce(h, op, p_red), rt
+
+    want, _ = run("sim")
+    got, rt = run("jax")
+    assert got == want == _oracle(X, op)
+    # the combine was a real collective, counted by its logical op
+    prim = {"sum": "psum", "prod": "pprod", "max": "pmax", "min": "pmin"}[op]
+    assert rt.executor.collective_counts[prim] >= 1
+
+
+# ----------------------------------------------------------------------
+# null backend: metadata-only reduce
+# ----------------------------------------------------------------------
+def test_null_reduce_completes_without_data():
+    n, P = 16, 4
+    rt = HDArrayRuntime(P, backend="null")
+    p_row = rt.partition_row((n, n))
+    p_col = rt.partition_col((n, n))
+    h = rt.create("x", (n, n))
+    rt.write(h, np.zeros((n, n), np.float32), p_row)
+    assert rt.executor.buffers["x"] is None
+    out = rt.reduce(h, "sum", p_col)       # used to raise TypeError
+    assert out is None                     # no data -> no value
+    # flop accounting: every element folded exactly once
+    assert rt.executor.reduce_elements == n * n
+    # the plan is identical to what sim would compute
+    rt_s = HDArrayRuntime(P, backend="sim")
+    pr = rt_s.partition_row((n, n))
+    pc = rt_s.partition_col((n, n))
+    hs = rt_s.create("x", (n, n))
+    rt_s.write(hs, np.zeros((n, n), np.float32), pr)
+    rt_s.reduce(hs, "sum", pc)
+    assert rt.comm_log == rt_s.comm_log
+    assert rt.executor.bytes_moved == rt_s.executor.bytes_moved > 0
+
+
+# ----------------------------------------------------------------------
+# empty-domain semantics
+# ----------------------------------------------------------------------
+def test_reduce_empty_domain_identity_and_error():
+    n, P = 4, 2
+    rt = HDArrayRuntime(P)
+    empty = rt.partition_manual((n, n), [Box.make((0, 0), (0, n))] * P)
+    h = rt.create("z", (n, n))
+    assert rt.reduce(h, "sum", empty) == 0.0     # used to IndexError
+    assert rt.reduce(h, "prod", empty) == 1.0
+    for op in ("max", "min"):
+        with pytest.raises(ValueError, match="empty domain"):
+            rt.reduce(h, op, empty)
+    # identity results carry the array dtype
+    assert rt.reduce(h, "sum", empty).dtype == np.float32
+
+
+def test_reduce_overlapping_manual_partition_folds_per_owner():
+    """Partitions are work assignments: a manual partition whose
+    regions OVERLAP folds the shared elements once per owner (the
+    reduce is the fold of all assigned work, not of the union)."""
+    rt = HDArrayRuntime(2)
+    p_own = rt.partition_row((4,))
+    p_red = rt.partition_manual((4,), [Box.make((0, 3)), Box.make((1, 4))])
+    h = rt.create("x", (4,))
+    rt.write(h, np.ones(4, np.float32), p_own)
+    assert rt.reduce(h, "sum", p_red) == 6.0   # elements 1,2 owned twice
+    assert rt.reduce(h, "max", p_red) == 1.0
+
+
+def test_reduce_unknown_op_rejected():
+    rt = HDArrayRuntime(2)
+    part = rt.partition_row((4, 4))
+    h = rt.create("x", (4, 4))
+    with pytest.raises(ValueError, match="unknown reduce op"):
+        rt.reduce(h, "mean", part)
+
+
+# ----------------------------------------------------------------------
+# plan visibility: comm_log, ALL_REDUCE lowering, plan cache
+# ----------------------------------------------------------------------
+def test_reduce_logged_with_all_reduce_bytes():
+    n, P = 12, 4
+    X = _data(n)
+    rt = HDArrayRuntime(P)
+    p_row = rt.partition_row((n, n))
+    p_col = rt.partition_col((n, n))
+    h = rt.create("x", (n, n))
+    rt.write(h, X, p_row)
+    rt.reduce(h, "sum", p_col)
+    name, total, kinds = rt.comm_log[-1]
+    by_kind = {k: b for _a, k, b in kinds}
+    assert "all_reduce" in by_kind
+    # combine tree: (live devices - 1) partial values
+    assert by_kind["all_reduce"] == (P - 1) * h.itemsize
+    # total = coherence traffic + combine tree
+    assert total == sum(by_kind.values())
+
+
+def test_reduce_lowering_describes_combine_tree():
+    n, P = 12, 4
+    rt = HDArrayRuntime(P)
+    part = rt.partition_row((n, n))
+    h = rt.create("x", (n, n))
+    rt.write(h, _data(n), part)
+    per_device = tuple(
+        rt._clip_region_to_array(rt.parts[part].region(p), h)
+        for p in range(P))
+    from repro.core.planner import CommPlan
+    plan = CommPlan("__reduce[max]_x", part,
+                    [rt._reduce_ap(h, per_device, "max")])
+    (op,) = lower_plan(plan, axis="p")
+    assert op.kind == CommKind.ALL_REDUCE
+    assert op.reduce_op == "max"
+    assert "pmax" in op.describe()
+    assert op.bytes_total == (P - 1) * h.itemsize
+
+
+def test_repeated_reduce_hits_plan_cache_and_goes_quiet():
+    """Second reduce over the same partition: GDEF is already coherent
+    there — the §4.2 cache replays the plan and no bytes move."""
+    n, P = 12, 4
+    X = _data(n)
+    rt = HDArrayRuntime(P)
+    p_row = rt.partition_row((n, n))
+    p_col = rt.partition_col((n, n))
+    h = rt.create("x", (n, n))
+    rt.write(h, X, p_row)
+    assert rt.reduce(h, "sum", p_col) == X.sum()
+    moved = rt.executor.bytes_moved
+    assert rt.reduce(h, "sum", p_col) == X.sum()
+    assert rt.executor.bytes_moved == moved          # nothing re-sent
+    # ops share one coherence plan: a different op is also a cache hit
+    assert rt.reduce(h, "max", p_col) == X.max()
+    assert rt.executor.bytes_moved == moved
+    assert rt.planner.stats.plans_cached >= 1
+
+
+# ----------------------------------------------------------------------
+# overlap schedule parity
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("op", OPS)
+def test_overlap_reduce_matches_serial(op):
+    n, P = 12, 4
+    X = _data(n, op)
+
+    def run(overlap):
+        rt = HDArrayRuntime(P, overlap=overlap)
+        p_row = rt.partition_row((n, n))
+        p_col = rt.partition_col((n, n))
+        h = rt.create("x", (n, n))
+        rt.write(h, X, p_row)
+        out = rt.reduce(h, op, p_col)
+        rt.close()
+        return out
+
+    assert run(False) == run(True) == _oracle(X, op)
+
+
+# ----------------------------------------------------------------------
+# repartition: the old_part_id coherence gate
+# ----------------------------------------------------------------------
+def test_repartition_asserts_old_partition_coherence():
+    n, P = 8, 2
+    rt = HDArrayRuntime(P)
+    p_row = rt.partition_row((n, n))
+    p_col = rt.partition_col((n, n))
+    h = rt.create("x", (n, n))
+    rt.write(h, np.ones((n, n), np.float32), p_row)
+    rt.repartition(h, p_row, p_col)               # coherent: fine
+    h2 = rt.create("y", (n, n))                   # never written
+    with pytest.raises(ValueError, match="not coherent"):
+        rt.repartition(h2, p_row, p_col)
+    rt.repartition(h2, None, p_col)               # None skips the gate
