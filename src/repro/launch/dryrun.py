@@ -44,8 +44,15 @@ from repro.roofline import analysis as RL
 from repro.train import sharding as SH
 from repro.train.step import TrainConfig, make_train_step
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                           "results", "dryrun")
+_DEFAULT_RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "..", "results", "dryrun")
+
+
+def results_dir() -> str:
+    """Where result records live.  REPRO_RESULTS_DIR (resolved at call
+    time, so monkeypatched env vars work) lets CI / tests regenerate
+    cells without rewriting the committed baselines in results/dryrun."""
+    return os.environ.get("REPRO_RESULTS_DIR") or _DEFAULT_RESULTS_DIR
 
 # Per-arch scale knobs (microbatches bound saved-activation HBM; moment
 # dtype bounds optimizer-state HBM).  These are the BASELINE settings —
@@ -234,17 +241,28 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
 def _result_path(arch, shape, mesh_name, rules):
     sfx = "" if rules == "baseline" else f"__{rules}"
-    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}{sfx}.json")
+    return os.path.join(results_dir(),
+                        f"{arch}__{shape}__{mesh_name}{sfx}.json")
 
 
 def run_cell(arch, shape, multi_pod, rules="baseline", force=False,
              train_overrides=None) -> Dict[str, Any]:
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     path = _result_path(arch, shape, mesh_name, rules)
-    if not force and os.path.exists(path):
-        with open(path) as f:
-            return json.load(f)
-    os.makedirs(RESULTS_DIR, exist_ok=True)
+    prior = None
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prior = json.load(f)
+        except ValueError:
+            prior = None
+        if not isinstance(prior, dict):
+            prior = None  # corrupt/garbled file: treat as absent
+        # Error records are environment failures, not results — never a
+        # cache hit, or one bad run poisons every later sweep.
+        if not force and prior is not None and prior.get("status") != "error":
+            return prior
+    os.makedirs(os.path.dirname(path), exist_ok=True)
     try:
         rec = lower_cell(arch, shape, multi_pod, rules,
                          train_overrides=train_overrides)
@@ -252,8 +270,14 @@ def run_cell(arch, shape, multi_pod, rules="baseline", force=False,
         rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
                "rules": rules, "status": "error", "error": repr(e),
                "trace": traceback.format_exc()[-4000:]}
+    if (rec["status"] == "error" and prior is not None
+            and prior.get("status") != "error"):
+        # Keep the last good record on disk rather than clobbering it;
+        # a stale error record is still refreshed with the new failure.
+        return rec
     with open(path, "w") as f:
         json.dump(rec, f, indent=1, default=str)
+        f.write("\n")
     return rec
 
 

@@ -13,14 +13,17 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 @pytest.mark.timeout(600)
 def test_dryrun_cell_compiles_on_production_mesh(tmp_path):
-    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    # REPRO_RESULTS_DIR keeps the run out of the committed baselines in
+    # results/dryrun — a regeneration on this host is not a measurement.
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_RESULTS_DIR=str(tmp_path))
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun",
          "--arch", "whisper-base", "--shape", "decode_32k",
          "--mesh", "single", "--force"],
         cwd=REPO, env=env, capture_output=True, text=True, timeout=540)
     assert out.returncode == 0, out.stderr[-2000:]
-    path = os.path.join(REPO, "results", "dryrun",
+    path = os.path.join(str(tmp_path),
                         "whisper-base__decode_32k__pod16x16.json")
     with open(path) as f:
         rec = json.load(f)
