@@ -1,0 +1,248 @@
+"""Device-residency study: the resident JaxExecutor vs the pre-PR
+stack/put/get round trip.
+
+The pre-residency ``jax`` backend staged every step through the host:
+``np.stack`` the mirrors, one ``device_put``, the collective program,
+one ``device_get``, section copy-back — and ran kernels on host numpy.
+The resident executor keeps shards on the mesh across steps, fuses
+each CommPlan into one jitted dispatch, and runs
+:func:`~repro.executors.kernels.device_kernel` kernels on device, so a
+steady-state step crosses the host↔device boundary ZERO times.
+
+This benchmark runs the same multi-step programs (Jacobi pipeline and
+a GEMM step loop, P >= 8) three ways —
+
+  * ``sim``              — the numpy oracle (parity reference),
+  * ``jax legacy``       — ``JaxExecutor(resident=False)``: the pre-PR
+                           per-step round trip, same collectives,
+  * ``jax resident``     — the device-resident fused executor —
+
+and reports per-step wall clock plus the full-buffer transfer counters
+(``h2d_transfers`` / ``d2h_transfers``).  It FAILS loudly unless
+
+  * both jax modes are bit-identical to sim,
+  * the resident steady state moved zero full buffers, and
+  * (full mode) the resident Jacobi pipeline is >= 5x faster per
+    steady step than legacy.  (Jacobi is the acceptance program: its
+    legacy cost is transfer-dominated.  GEMM is reported too, but its
+    steady state is compute-bound — the §4.2 cache leaves it no
+    steady-state traffic to delete — so it carries no speedup gate.)
+
+Quick mode (CI) checks parity + zero steady-state transfers only:
+per-step times on small arrays measure collective dispatch overhead,
+not the transfers residency deletes, and CI machines are noisy.
+
+Run:  PYTHONPATH=src python -m benchmarks.executor_residency [--quick]
+      python -m benchmarks.run residency        # quick smoke (CI)
+
+Full mode writes results/executor_residency.json + BENCH_executor.json
+(quick mode writes results/executor_residency_quick.json only).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+SPEEDUP_FLOOR = 5.0         # acceptance: resident >= 5x per steady step
+
+
+def _set_flags():
+    from repro.launch.mesh import ensure_host_devices
+    ensure_host_devices(8)
+
+
+# -- programs (device-kernel convention: one source, every backend) ----
+def _jacobi(rt, n, iters):
+    """Ping-pong Jacobi (the classic formulation: A and B swap roles
+    each sweep, no copy kernel) — every step is one halo exchange plus
+    one stencil sweep, the §4.2 steady state."""
+    from repro.core import AccessSpec, Box, IDENTITY_2D
+    from repro.executors import device_kernel, kernel_put
+
+    rng = np.random.default_rng(11)
+    B0 = rng.normal(size=(n, n)).astype(np.float32)
+    fp = AccessSpec.of((0, -1), (0, 1), (-1, 0), (1, 0), (0, 0))
+    pd = rt.partition_row((n, n))
+    pw = rt.partition_row((n, n), region=Box.make((1, n - 1), (1, n - 1)))
+    hA, hB = rt.create("A", (n, n)), rt.create("B", (n, n))
+    rt.write(hA, B0, pd)
+    rt.write(hB, B0, pd)
+
+    def sweep(src, dst):
+        @device_kernel
+        def jac(region, bufs):
+            (r0, r1), (c0, c1) = region.bounds
+            Sv = bufs[src]
+            new = (Sv[r0:r1, c0 - 1:c1 - 1] + Sv[r0:r1, c0 + 1:c1 + 1]
+                   + Sv[r0 - 1:r1 - 1, c0:c1] + Sv[r0 + 1:r1 + 1, c0:c1]) / 4
+            return {dst: kernel_put(bufs[dst],
+                                    (slice(r0, r1), slice(c0, c1)), new)}
+        return jac
+
+    jac_ab = sweep("B", "A")
+    jac_ba = sweep("A", "B")
+    phase = [0]
+
+    def step():
+        if phase[0] % 2 == 0:
+            rt.apply_kernel("jac_ab", pw, jac_ab, [hA, hB],
+                            uses={"B": fp}, defs={"A": IDENTITY_2D})
+        else:
+            rt.apply_kernel("jac_ba", pw, jac_ba, [hA, hB],
+                            uses={"A": fp}, defs={"B": IDENTITY_2D})
+        phase[0] += 1
+
+    return step, (lambda: rt.read_coherent(hB))
+
+
+def _gemm(rt, n, iters):
+    from repro.core import COL_ALL, IDENTITY_2D, ROW_ALL
+    from repro.executors import device_kernel, kernel_put
+
+    rng = np.random.default_rng(12)
+    A = rng.normal(size=(n, n)).astype(np.float32)
+    B = rng.normal(size=(n, n)).astype(np.float32)
+    part = rt.partition_row((n, n))
+    hA, hB, hC = (rt.create(s, (n, n)) for s in "abc")
+    rt.write(hA, A, part)
+    rt.write(hB, B, part)
+    rt.write(hC, np.zeros((n, n), np.float32), part)
+
+    @device_kernel
+    def mm(region, bufs):
+        rows = region.to_slices()[0]
+        return {"c": kernel_put(bufs["c"], (rows, slice(None)),
+                                bufs["a"][rows, :] @ bufs["b"])}
+
+    def step():
+        rt.apply_kernel("gemm", part, mm, [hA, hB, hC],
+                        uses={"a": ROW_ALL, "b": COL_ALL},
+                        defs={"c": IDENTITY_2D})
+
+    return step, (lambda: rt.read(hC, part))
+
+
+PROGRAMS = {"jacobi": _jacobi, "gemm": _gemm}
+
+
+def _run(program: str, mode: str, nproc: int, n: int, iters: int,
+         warmup: int) -> Dict:
+    from repro.core import HDArrayRuntime
+    from repro.executors import JaxExecutor
+
+    if mode == "sim":
+        rt = HDArrayRuntime(nproc, backend="sim")
+    else:
+        rt = HDArrayRuntime(nproc, backend="jax", executor=JaxExecutor(
+            nproc, resident=(mode == "jax resident")))
+    step, finish = PROGRAMS[program](rt, n, iters)
+    for _ in range(warmup):                    # cold: compile + upload
+        step()
+    ex = rt.executor
+    h2d0 = getattr(ex, "h2d_transfers", 0)
+    d2h0 = getattr(ex, "d2h_transfers", 0)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        step()
+    per_step = (time.perf_counter() - t0) / iters
+    row = {
+        "program": program, "mode": mode, "nproc": nproc, "n": n,
+        "iters": iters, "per_step_s": per_step,
+        "steady_h2d": getattr(ex, "h2d_transfers", 0) - h2d0,
+        "steady_d2h": getattr(ex, "d2h_transfers", 0) - d2h0,
+        "bytes_moved": ex.bytes_moved,
+    }
+    if mode != "sim":
+        row["collectives"] = dict(ex.collective_counts)
+    return row, finish()
+
+
+def main(quick: bool = False) -> dict:
+    _set_flags()
+    import jax
+
+    nproc = 8
+    if len(jax.devices()) < nproc:
+        raise SystemExit(f"executor_residency: needs {nproc} host devices, "
+                         f"found {len(jax.devices())} (jax initialized "
+                         "before ensure_host_devices?)")
+    n, iters, warmup = (128, 5, 2) if quick else (1024, 10, 3)
+    rows: List[Dict] = []
+    summary: Dict[str, dict] = {}
+    print(f"{'program':8s} {'mode':14s} {'ms/step':>9s} {'steady h2d':>10s} "
+          f"{'steady d2h':>10s}")
+    for program in PROGRAMS:
+        outs = {}
+        for mode in ("sim", "jax legacy", "jax resident"):
+            row, out = _run(program, mode, nproc, n, iters, warmup)
+            rows.append(row)
+            outs[mode] = out
+            print(f"{program:8s} {mode:14s} {row['per_step_s']*1e3:9.3f} "
+                  f"{row['steady_h2d']:10d} {row['steady_d2h']:10d}")
+        # jacobi is elementwise -> bit-identical everywhere.  gemm's
+        # device kernel is an XLA dot whose summation order differs
+        # from numpy BLAS, so resident parity there is allclose at
+        # float32 dot tolerance (legacy runs the kernel on host numpy
+        # and stays bit-identical).
+        if not np.array_equal(outs["sim"], outs["jax legacy"]):
+            raise SystemExit(f"PARITY FAILURE: sim != jax legacy ({program})")
+        exact = np.array_equal(outs["sim"], outs["jax resident"])
+        if program == "jacobi" and not exact:
+            raise SystemExit("PARITY FAILURE: sim != jax resident (jacobi)")
+        if not exact and not np.allclose(outs["sim"], outs["jax resident"],
+                                         rtol=2e-5, atol=1e-4):
+            raise SystemExit(f"PARITY FAILURE: sim !~ jax resident "
+                             f"({program})")
+        legacy = next(r for r in rows if r["program"] == program
+                      and r["mode"] == "jax legacy")
+        res = next(r for r in rows if r["program"] == program
+                   and r["mode"] == "jax resident")
+        speedup = legacy["per_step_s"] / res["per_step_s"]
+        summary[program] = {
+            "nproc": nproc, "n": n, "iters": iters,
+            "legacy_per_step_s": legacy["per_step_s"],
+            "resident_per_step_s": res["per_step_s"],
+            "speedup": speedup,
+            "legacy_steady_h2d": legacy["steady_h2d"],
+            "legacy_steady_d2h": legacy["steady_d2h"],
+            "resident_steady_h2d": res["steady_h2d"],
+            "resident_steady_d2h": res["steady_d2h"],
+            "parity": True,
+        }
+        print(f"{'':8s} parity ✓   resident speedup {speedup:6.1f}x   "
+              f"transfers {legacy['steady_h2d']+legacy['steady_d2h']} -> "
+              f"{res['steady_h2d']+res['steady_d2h']}")
+        if res["steady_h2d"] or res["steady_d2h"]:
+            raise SystemExit(f"RESIDENCY FAILURE: {program} moved "
+                             f"{res['steady_h2d']}+{res['steady_d2h']} full "
+                             "buffers in steady state (expected zero)")
+    out = {"quick": quick, "summary": summary}
+    import os
+    os.makedirs("results", exist_ok=True)
+    dest = ("results/executor_residency_quick.json" if quick
+            else "results/executor_residency.json")
+    with open(dest, "w") as f:
+        json.dump({"rows": rows, **out}, f, indent=1)
+    if not quick:
+        with open("BENCH_executor.json", "w") as f:
+            json.dump(out, f, indent=1)
+    print(f"# -> {dest}" + ("" if quick else " + BENCH_executor.json"))
+    if not quick:
+        jac = summary["jacobi"]["speedup"]
+        if jac < SPEEDUP_FLOOR:
+            raise SystemExit(f"executor_residency: speedup regression — "
+                             f"jacobi {jac:.1f}x < {SPEEDUP_FLOOR}x per "
+                             "steady step")
+        print(f"# jacobi resident speedup {jac:.1f}x (floor "
+              f"{SPEEDUP_FLOOR}x); steady-state transfers zero; parity OK")
+    else:
+        print("# quick mode: parity + zero steady-state transfers verified")
+    return out
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv[1:])

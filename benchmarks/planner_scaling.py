@@ -16,10 +16,14 @@ writes:
 smoke runs never clobber the committed full sweep).
 
 The reference becomes very slow at large P (that is the point); its
-iteration counts shrink adaptively and GEMM caps at P=256.  Usage:
+iteration counts shrink adaptively.  Usage:
 
-  python -m benchmarks.planner_scaling [--quick]
+  python -m benchmarks.planner_scaling [--quick] [--cases a,b]
   python -m benchmarks.run planner          # quick smoke (CI)
+
+``--cases`` reruns a subset and MERGES its rows into the committed
+results/BENCH files (used to regenerate single records without paying
+for the full multi-hour sweep).
 """
 from __future__ import annotations
 
@@ -188,12 +192,15 @@ def run_case(case: str, nproc: int, quick: bool,
     return rows
 
 
-def main(quick: bool = False) -> dict:
+def main(quick: bool = False, cases: Optional[List[str]] = None) -> dict:
     procs = (32, 128) if quick else (32, 128, 256, 1024)
     all_rows: List[dict] = []
     summary: Dict[str, dict] = {}
-    for case in CASES:
-        ref_cap = 256 if case == "gemm" else None  # P² messages: see module doc
+    for case in (cases or CASES):
+        # the Eqn (1) geometry memo + bulk commit make the live gemm
+        # cold plan O(P); the dense reference pays its P² sweep here —
+        # no cap, the full speedup_cold column is measured at every P
+        ref_cap = None
         for nproc in procs:
             rows = run_case(case, nproc, quick, ref_cap)
             all_rows.extend(rows)
@@ -226,6 +233,25 @@ def main(quick: bool = False) -> dict:
     # quick (CI smoke) runs must not clobber the committed full sweep
     dest = ("results/planner_scaling_quick.json" if quick
             else "results/planner_scaling.json")
+    if cases and not quick:
+        # subset rerun: merge into the committed records, keeping every
+        # untouched case's rows/summary intact
+        try:
+            with open(dest) as f:
+                old = json.load(f)
+        except (OSError, ValueError):
+            old = {"rows": []}
+        all_rows = [r for r in old.get("rows", [])
+                    if r.get("case") not in cases] + all_rows
+        try:
+            with open("BENCH_planner.json") as f:
+                old_summary = json.load(f).get("summary", {})
+        except (OSError, ValueError):
+            old_summary = {}
+        merged = {k: v for k, v in old_summary.items()
+                  if k.split("@")[0] not in cases}
+        merged.update(summary)
+        out = {**out, "summary": merged}
     with open(dest, "w") as f:
         json.dump({"rows": all_rows, **out}, f, indent=1, default=str)
     if not quick:
@@ -245,8 +271,31 @@ def main(quick: bool = False) -> dict:
     if target and min(target) < 10.0:
         raise SystemExit(f"planner_scaling: speedup regression — "
                          f"{min(target):.1f}x < 10x at P>=256")
+    cold = [(k, e["speedup_cold"]) for k, e in summary.items()
+            if k.startswith("gemm@") and "speedup_cold" in e]
+    if cold and min(s for _k, s in cold) < 1.0:
+        raise SystemExit("planner_scaling: gemm cold-plan regression — "
+                         f"{min(cold, key=lambda t: t[1])} < 1.0x vs the "
+                         "dense reference")
     return out
 
 
 if __name__ == "__main__":
-    main(quick="--quick" in sys.argv[1:])
+    args = sys.argv[1:]
+    sel = None
+    for i, a in enumerate(args):
+        if a.startswith("--cases"):
+            if "=" in a:
+                val = a.split("=", 1)[1]
+            elif i + 1 < len(args):
+                val = args[i + 1]
+            else:
+                raise SystemExit(
+                    "usage: --cases CASE[,CASE...]  (one of: "
+                    + ", ".join(CASES) + ")")
+            sel = val.split(",")
+            unknown = [c for c in sel if c not in CASES]
+            if unknown:
+                raise SystemExit(f"unknown case(s) {unknown}; one of: "
+                                 + ", ".join(CASES))
+    main(quick="--quick" in args, cases=sel)

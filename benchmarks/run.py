@@ -49,6 +49,12 @@ def main() -> None:
         print("\n===== Executor backends: parity + §4.2 overlap =====")
         from . import executor_overlap
         executor_overlap.main()
+    if which in ("all", "residency"):
+        print("\n===== Device residency: resident vs stack/put/get =====")
+        from . import executor_residency
+        # quick sweep here (CI smoke); run the module directly for the
+        # full study that regenerates BENCH_executor.json
+        executor_residency.main(quick=True)
     print(f"\n# benchmarks done in {time.time()-t0:.1f}s")
 
 

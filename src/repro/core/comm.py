@@ -186,8 +186,7 @@ def halo_exchange(x, axis: str, dim: int, widths: Tuple[int, int]):
         recv = jax.lax.ppermute(bot, axis, src)
         recv = jnp.where(idx < n - 1, recv, jnp.zeros_like(recv))
         parts.append(recv)
-    import jax.numpy as jnp2
-    return jnp2.concatenate(parts, axis=dim)
+    return jnp.concatenate(parts, axis=dim)
 
 
 def all_gather(x, axis: str, dim: int):

@@ -180,6 +180,27 @@ class SparseGDEF:
                     if self._exc_churn[p] * 2 >= self.nproc:
                         self._refactor_row(p)
 
+    def subtract_into_row(self, p: int, d: SectionSet) -> None:
+        """``sGDEF[p][q] −= d`` for every q ≠ p, in O(1 + #exceptions).
+
+        The Eqn (3) bulk path for a sender whose SENDMSG is the same
+        set for all peers (an all-gather row): one default update
+        instead of P−1 :meth:`subtract_at` calls.  The bbox index stays
+        conservative (subtract only shrinks)."""
+        if d.is_empty():
+            return
+        base = self._default[p]
+        nb = base.subtract(d)
+        new_default = base if (nb is base or nb == base) else nb
+        self._default[p] = new_default
+        exc = self._exc[p]
+        for q, e in list(exc.items()):
+            ne = e.subtract(d)
+            if ne == new_default:
+                del exc[q]          # back in canonical factorization
+            elif ne is not e and not (ne == e):
+                exc[q] = ne
+
     def _refactor_row(self, p: int) -> None:
         """Every column of row p is an exception — the default carries
         no entry anymore.  Re-elect the majority value as the default

@@ -119,10 +119,43 @@ class HDArray:
         """
         # (3): sGDEF[p][q] = (sGDEF[p][q] - SENDMSG[p][q]) U LDEF[p]
         # (4) is the mirrored update of the same stored matrix.
+        # Messages are grouped by sender so the dense-looking per-pair
+        # sweep costs O(senders + receivers + exceptions), not O(pairs).
+        # A *bulk* sender ships ONE value to every peer (an all-gather
+        # row; the planner's geometry memo makes those the same object):
+        # its row takes the sGDEF row-level subtract, and the validity
+        # update collapses to `valid[q] ∪= U` for the union U of all
+        # bulk values — exact because every peer of a bulk sender
+        # receives its whole value, and a bulk sender p's own value
+        # already satisfies sGDEF[p][·] ⊆ valid[p] (pending sends are
+        # sections the sender holds up to date).
+        by_src: Dict[int, list] = {}
         for (p, q), msg in send.items():
             if not msg.is_empty():
-                self.sgdef.subtract_at(p, q, msg)
-                self.valid.union_at(q, msg)  # q received a copy
+                by_src.setdefault(p, []).append((q, msg))
+        bulk_vals: Dict[int, SectionSet] = {}    # id(value) -> value
+        by_dst: Dict[int, list] = {}
+        for p, out in by_src.items():
+            first = out[0][1]
+            if (len(out) == self.nproc - 1
+                    and all(m is first for _q, m in out[1:])):
+                self.sgdef.subtract_into_row(p, first)
+                bulk_vals[id(first)] = first
+            else:
+                for q, msg in out:
+                    self.sgdef.subtract_at(p, q, msg)
+                    by_dst.setdefault(q, []).append(msg)
+        if bulk_vals:
+            u = SectionSet.of(
+                *(b for v in bulk_vals.values() for b in v))
+            for q in range(self.nproc):
+                self.valid.union_at(q, u)
+        for q, inc in by_dst.items():        # q received a copy
+            if len(inc) == 1:
+                self.valid.union_at(q, inc[0])
+            else:
+                self.valid.union_at(
+                    q, SectionSet.of(*(b for m in inc for b in m)))
         for p in range(self.nproc):
             d = ldef[p]
             if d.is_empty():

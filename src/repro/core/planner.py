@@ -140,28 +140,38 @@ def classify(messages: Dict[Tuple[int, int], SectionSet], nproc: int,
     diagonal corners of a 2-D block grid) or wrap around the domain
     boundary.  Without a partition it falls back to the legacy 1-D
     rank-adjacency test."""
-    live = {pq: m for pq, m in messages.items() if not m.is_empty()}
-    if not live:
-        return CommKind.NONE
-    fanouts: Dict[int, set] = {}
-    for (p, q) in live:
-        fanouts.setdefault(p, set()).add(q)
-    if all(len(v) == nproc - 1 for v in fanouts.values()):
-        per_src = {}
-        uniform = True
-        for (p, _q), m in live.items():
-            if p in per_src and per_src[p] != m:
-                uniform = False
-                break
+    # single pass over the (possibly P²-sized) message dict: count each
+    # sender's fan-out — (p, q) keys are unique, so a count IS the
+    # distinct-receiver count — and track per-sender value uniformity
+    # with an identity-first compare (the planner's geometry memo makes
+    # equal messages the same object).
+    nlive = 0
+    fanouts: Dict[int, int] = {}
+    per_src: Dict[int, SectionSet] = {}
+    uniform = True
+    for (p, q), m in messages.items():
+        if m.is_empty():
+            continue
+        nlive += 1
+        fanouts[p] = fanouts.get(p, 0) + 1
+        prev = per_src.get(p)
+        if prev is None:
             per_src[p] = m
+        elif uniform and prev is not m and prev != m:
+            uniform = False
+    if not nlive:
+        return CommKind.NONE
+    if all(v == nproc - 1 for v in fanouts.values()):
         if uniform:
             return CommKind.ALL_GATHER
         if len(fanouts) == nproc:
             return CommKind.ALL_TO_ALL
     if part is not None:
-        if all(part.adjacent(p, q) for (p, q) in live):
+        if all(part.adjacent(p, q) for (p, q), m in messages.items()
+               if not m.is_empty()):
             return CommKind.HALO
-    elif all(abs(p - q) == 1 for (p, q) in live):
+    elif all(abs(p - q) == 1 for (p, q), m in messages.items()
+             if not m.is_empty()):
         return CommKind.HALO
     return CommKind.P2P
 
@@ -303,17 +313,34 @@ class Planner:
                 pairs = self._sendmsg_pairs(a, luse)
                 self.stats.candidate_pairs += len(pairs)
                 self.stats.pairs_pruned += nproc * (nproc - 1) - len(pairs)
+                # Dedupe identical pair geometries: the row-factored
+                # sGDEF hands back ONE default object per sender row and
+                # broadcast-style clauses (GEMM's COL_ALL) give every
+                # receiver an equal LUSE, so the P² all-gather sweep has
+                # only O(P) distinct (entry, LUSE) geometries.  Map each
+                # LUSE to a value-representative, then memoize the
+                # intersection (and its byte count) by object identity —
+                # cold gemm planning drops from P² set ops to ~P.
+                luse_rep: Dict[SectionSet, SectionSet] = {}
+                reps = tuple(luse_rep.setdefault(s, s) for s in luse)
+                memo: Dict[Tuple[int, int], Tuple[SectionSet, int]] = {}
+                itemsize = a.itemsize
                 for p, q in pairs:
                     p, q = int(p), int(q)
                     ent = a.sgdef.entry(p, q)
                     if ent.is_empty():
                         continue
                     # (1): SENDMSG[p][q] = sGDEF[p][q] n LUSE_q
-                    m = ent.intersect(luse[q])
-                    self.stats.intersect_ops += 1
+                    mk = (id(ent), id(reps[q]))
+                    hit = memo.get(mk)
+                    if hit is None:
+                        m = ent.intersect(reps[q])
+                        self.stats.intersect_ops += 1
+                        hit = memo[mk] = (m, m.nbytes(itemsize))
+                    m, mb = hit
                     if not m.is_empty():
                         msgs[(p, q)] = m
-                        nbytes += m.nbytes(a.itemsize)
+                        nbytes += mb
             kind = classify(msgs, nproc, part)
             aplans.append(ArrayCommPlan(a.name, msgs, kind, nbytes, luse, ldef))
         plan = CommPlan(kernel, part.part_id, aplans)

@@ -157,12 +157,12 @@ class HDArrayRuntime:
                 plan, part, kernel, arrays, self.arrays, uses, defs, kw,
                 commit=lambda: self.planner.commit(plan, arrays, part))
         else:
-            for ap in plan.arrays:
-                if ap.messages:
-                    self.executor.execute_messages(
-                        self.arrays[ap.array], ap.messages, kind=ap.kind)
+            # one call for the whole plan: collective backends fuse all
+            # arrays' messages into a single jitted dispatch
+            self.executor.execute_plan(plan, self.arrays)
             if kernel is not None:
-                self.executor.run_kernel(kernel, part.regions, arrays, **kw)
+                self.executor.run_kernel(kernel, part.regions, arrays,
+                                         defs=tuple(defs), **kw)
             self.planner.commit(plan, arrays, part)
         self.log_plan(kernel_name, plan)
         return plan
@@ -248,10 +248,7 @@ class HDArrayRuntime:
                 plan, part, None, [arr], self.arrays, uses, {}, {},
                 commit=lambda: self.planner.commit(plan, [arr], part))
         else:
-            for ap in plan.arrays:
-                if ap.messages:
-                    self.executor.execute_messages(
-                        arr, ap.messages, kind=ap.kind)
+            self.executor.execute_plan(plan, self.arrays)
             self.planner.commit(plan, [arr], part)
         partials = self.executor.reduce_local(arr, per_device, op)
         out = self.executor.reduce_combine(partials, op, arr.dtype)

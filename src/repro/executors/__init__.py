@@ -14,9 +14,12 @@ backend    what executes a classified ``CommPlan``
 ``null``   metadata only: bytes counted, nothing allocated — paper-
            scale comm-volume studies in milliseconds
            (:class:`~repro.executors.null.NullExecutor`)
-``jax``    real XLA collectives: each ``ArrayCommPlan`` is lowered by
-           CommKind to ``jax.lax.all_gather`` / ``ppermute`` /
-           ``all_to_all`` inside ``shard_map`` over a host-device mesh
+``jax``    device-RESIDENT real XLA collectives: shards stay on a
+           host-device mesh across steps, each ``CommPlan`` runs as
+           ONE fused jitted ``shard_map`` program (``all_gather`` /
+           ``ppermute`` / ``all_to_all`` by CommKind), and
+           :func:`~repro.executors.kernels.device_kernel` kernels
+           execute on device — zero steady-state host↔device traffic
            (:class:`~repro.executors.jax_exec.JaxExecutor`)
 =========  ============================================================
 
@@ -28,9 +31,11 @@ from .base import Executor, available_backends, make_executor, register_executor
 from .sim import SimExecutor
 from .null import NullExecutor
 from .jax_exec import JaxExecutor
+from .kernels import device_kernel, kernel_put
 from .overlap import OverlapScheduler
 
 __all__ = [
     "Executor", "available_backends", "make_executor", "register_executor",
     "SimExecutor", "NullExecutor", "JaxExecutor", "OverlapScheduler",
+    "device_kernel", "kernel_put",
 ]

@@ -12,8 +12,21 @@ the four runtime actions the paper's library issues (§5):
   devices.  The optional ``kind`` is the planner's CommKind pattern so
   a backend can lower to the matching collective instead of emulating
   point-to-point copies,
+* ``execute_plan`` — move ALL arrays' message sets of one CommPlan.
+  The runtime calls this (not per-array ``execute_messages``) so a
+  backend may fuse the whole plan into one dispatch; the default
+  implementation is the per-array loop,
+* ``sync_host`` / ``sync_device`` — the residency hooks: make the host
+  mirrors (resp. the device-resident copy) of an array coherent.
+  No-ops on host-memory backends; on the resident jax backend every
+  full-buffer host↔device crossing goes through these hooks (the
+  ``resident=False`` legacy mode round-trips per step instead) and is
+  counted (``h2d_transfers`` / ``d2h_transfers``),
 * ``run_kernel`` — invoke the user kernel once per device over its work
-  region, against full-size device buffers (OpenCL semantics),
+  region, against full-size device buffers (OpenCL semantics).  A
+  kernel marked by :func:`repro.executors.kernels.device_kernel`
+  returns updated buffers instead of mutating, which device-resident
+  backends run entirely on device,
 * ``reduce_local`` / ``reduce_combine`` — the two phases of
   ``HDArrayReduce``: per-device reduction of each device's (planner-
   coherent) sections, then the global combine tree over the partials.
@@ -40,7 +53,7 @@ if TYPE_CHECKING:
     import numpy as np
 
     from repro.core.hdarray import HDArray
-    from repro.core.planner import CommKind
+    from repro.core.planner import CommKind, CommPlan
     from repro.core.sections import Box, SectionSet
 
 
@@ -69,8 +82,16 @@ class Executor(Protocol):
         kind: Optional["CommKind"] = None,
     ) -> None: ...
 
+    def execute_plan(self, plan: "CommPlan",
+                     arrays_by_name: Dict[str, "HDArray"]) -> None: ...
+
+    def sync_host(self, arr: "HDArray") -> None: ...
+
+    def sync_device(self, arr: "HDArray") -> None: ...
+
     def run_kernel(self, kernel: Callable, part_regions: Sequence["Box"],
-                   arrays: Sequence["HDArray"], **kw) -> None: ...
+                   arrays: Sequence["HDArray"],
+                   defs: Optional[Sequence[str]] = None, **kw) -> None: ...
 
     def reduce_local(self, arr: "HDArray",
                      per_device: Sequence["SectionSet"],

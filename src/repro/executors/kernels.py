@@ -1,0 +1,63 @@
+"""Backend-portable device kernels.
+
+The paper's kernels are OpenCL work-item functions; our executors call
+a Python ``kernel(region, bufs, **kw)`` once per device.  Two calling
+conventions coexist:
+
+* **host kernels** (the default) mutate their ``def`` arrays in place
+  on numpy device buffers.  They run on the Sim mirrors everywhere —
+  on the jax backend this costs a d2h sync of every stale input.
+* **device kernels** — marked with :func:`device_kernel` — are PURE
+  and jax-traceable: they take the full per-device buffers and RETURN
+  ``{name: updated_full_buffer}`` for every array they define.  The
+  resident :class:`~repro.executors.jax_exec.JaxExecutor` traces them
+  once per (kernel, regions) signature into a jitted per-device
+  program over the resident shards, so a pipeline of such kernels
+  never leaves the device.  Every other backend simply applies the
+  returned buffers to its numpy mirrors, so ONE kernel source runs —
+  bit-identically — on sim and jax.
+
+:func:`kernel_put` writes a section functionally on either array
+flavor (``ndarray`` copy-and-assign, jax ``.at[].set``), which is
+usually all a stencil/GEMM body needs to be convention-agnostic::
+
+    @device_kernel
+    def jacobi(region, bufs):
+        (r0, r1), (c0, c1) = region.bounds
+        B = bufs["B"]
+        new = (B[r0:r1, c0 - 1:c1 - 1] + B[r0:r1, c0 + 1:c1 + 1]
+               + B[r0 - 1:r1 - 1, c0:c1] + B[r0 + 1:r1 + 1, c0:c1]) / 4
+        return {"A": kernel_put(bufs["A"], (slice(r0, r1), slice(c0, c1)),
+                                new)}
+
+Region bounds are static Python ints at trace time (the partition is
+known when the program is built), so plain basic slicing traces fine;
+only the *assignment* needs :func:`kernel_put`.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+
+def device_kernel(fn: Callable) -> Callable:
+    """Mark ``fn`` as a pure, jax-traceable device kernel.
+
+    Contract: ``fn(region, bufs, **kw) -> {name: updated_buffer}``,
+    returning the FULL updated per-device buffer of every array it
+    defines and mutating nothing.  See the module docstring.
+    """
+    fn.__hdarray_device__ = True
+    return fn
+
+
+def kernel_put(buf, slices, value):
+    """Functional section assignment, portable across numpy and jax:
+    returns a new buffer equal to ``buf`` with ``buf[slices] = value``
+    applied."""
+    if hasattr(buf, "at"):            # jax array (inside a trace)
+        return buf.at[slices].set(value)
+    out = np.array(buf, copy=True)
+    out[slices] = value
+    return out

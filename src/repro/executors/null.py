@@ -44,7 +44,8 @@ class NullExecutor(SimExecutor):
             self.bytes_moved += secs.volume() * itemsize
             self.messages_executed += len(secs)
 
-    def run_kernel(self, kernel, part_regions, arrays, **kw) -> None:
+    def run_kernel(self, kernel, part_regions, arrays, defs=None,
+                   **kw) -> None:
         raise RuntimeError("NullExecutor cannot run kernels")
 
     def reduce_local(self, arr: "HDArray", per_device, op: str):

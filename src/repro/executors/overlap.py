@@ -77,18 +77,22 @@ class OverlapScheduler:
             if kernel is None:
                 return
             split = self._halo_split(plan, part, uses, defs)
+            dnames = tuple(defs)
             if split is None:
                 comm.result()
-                self.executor.run_kernel(kernel, part.regions, arrays, **kw)
+                self.executor.run_kernel(kernel, part.regions, arrays,
+                                         defs=dnames, **kw)
             else:
                 interior_rounds, boundary_rounds = split
                 self.halo_splits += 1
                 # interior sweeps overlap the halo exchange
                 for regions in interior_rounds:
-                    self.executor.run_kernel(kernel, regions, arrays, **kw)
+                    self.executor.run_kernel(kernel, regions, arrays,
+                                             defs=dnames, **kw)
                 comm.result()
                 for regions in boundary_rounds:
-                    self.executor.run_kernel(kernel, regions, arrays, **kw)
+                    self.executor.run_kernel(kernel, regions, arrays,
+                                             defs=dnames, **kw)
         finally:
             # surface comm-thread exceptions even on early error paths
             comm.result()
@@ -127,6 +131,7 @@ class OverlapScheduler:
                 comm.result()
             if st.get("kernel") is not None:
                 self.executor.run_kernel(st["kernel"], part.regions, arrays,
+                                         defs=tuple(st["defs"]),
                                          **st.get("kw", {}))
             runtime.log_plan(st["kernel_name"], plan)
             plans.append(plan)
@@ -142,10 +147,9 @@ class OverlapScheduler:
     # -- internals -------------------------------------------------------
     def _run_messages(self, plan: "CommPlan",
                       arrays_by_name: Dict[str, "HDArray"]) -> None:
-        for ap in plan.arrays:
-            if ap.messages:
-                self.executor.execute_messages(
-                    arrays_by_name[ap.array], ap.messages, kind=ap.kind)
+        # one plan-fused dispatch (collective backends jit the whole
+        # plan; host backends loop per array)
+        self.executor.execute_plan(plan, arrays_by_name)
 
     def _halo_split(self, plan: "CommPlan", part: "Partition",
                     uses: Dict, defs: Dict):

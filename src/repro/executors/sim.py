@@ -84,16 +84,40 @@ class SimExecutor:
             self.bytes_moved += secs.volume() * itemsize
             self.messages_executed += len(secs)
 
+    def execute_plan(self, plan, arrays_by_name: Dict[str, "HDArray"]) -> None:
+        """Execute every array's messages of a CommPlan.  The default
+        is a per-array loop; collective backends override this with one
+        fused dispatch for the whole plan."""
+        for ap in plan.arrays:
+            if ap.messages:
+                self.execute_messages(arrays_by_name[ap.array], ap.messages,
+                                      kind=ap.kind)
+
+    # -- residency hooks (no-ops: sim data already lives on the host) ---
+    def sync_host(self, arr: "HDArray") -> None:
+        pass
+
+    def sync_device(self, arr: "HDArray") -> None:
+        pass
+
     def run_kernel(self, kernel: Callable, part_regions: Sequence["Box"],
-                   arrays: Sequence["HDArray"], **kw) -> None:
+                   arrays: Sequence["HDArray"],
+                   defs: Optional[Sequence[str]] = None, **kw) -> None:
         """Run the kernel once per device over its work region.  The
         kernel sees full-size device buffers (OpenCL semantics) and
-        mutates its `def` arrays in place."""
+        either mutates its `def` arrays in place (host kernels) or
+        returns ``{name: updated_buffer}`` (pure ``device_kernel``
+        convention), which is applied to the mirrors here.  ``defs``
+        (the def-clause array names) is bookkeeping for residency-aware
+        backends; host-memory backends ignore it."""
         for p, region in enumerate(part_regions):
             if region.is_empty():
                 continue
             bufs = {a.name: self.buffers[a.name][p] for a in arrays}
-            kernel(region, bufs, **kw)
+            res = kernel(region, bufs, **kw)
+            if isinstance(res, dict):
+                for name, val in res.items():
+                    bufs[name][...] = np.asarray(val)
 
     # -- reductions (HDArrayReduce, local phase + global combine) -------
     def reduce_local(self, arr: "HDArray",
