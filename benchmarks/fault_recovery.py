@@ -1,0 +1,227 @@
+"""Fault-recovery study: recovery latency vs checkpoint interval.
+
+Runs the chaos suite's 10-step Jacobi pipeline (one device-kernel
+source, sim oracle + jax collectives) under seeded fault injection and
+measures what fault tolerance actually costs:
+
+  * **checkpoint overhead** — wall clock of a fault-FREE pipeline at
+    each checkpoint interval vs the uncheckpointed run,
+  * **recovery latency** — extra wall clock of a faulted run over the
+    fault-free run at the same interval, split into restore time and
+    replayed-step time (``PlannerStats.steps_replayed``: a shorter
+    interval means a nearer restore point and fewer replayed steps —
+    the classic interval/latency trade),
+  * **recovery traffic** — the planned restore bytes + (for rank loss)
+    the repartition migration bytes, from comm_log / recovery_log.
+
+Every faulted run is gated BIT-IDENTICAL against the uninterrupted
+reference on its backend (SystemExit on mismatch) — recovery must be
+invisible in the values: transient faults at first/middle/last step,
+a torn overlap-scheduled commit, and a permanent rank loss (planned
+shrink onto the surviving mesh).
+
+Quick mode (CI chaos smoke) runs the sim sweep + one jax scenario and
+checks the parity gates only; timings on CI are noise.
+
+Run:  PYTHONPATH=src python -m benchmarks.fault_recovery [--quick]
+      python -m benchmarks.run faults           # quick smoke (CI)
+
+Full mode writes results/fault_recovery.json + BENCH_faults.json
+(quick mode writes results/fault_recovery_quick.json only).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def _set_flags():
+    from repro.launch.mesh import ensure_host_devices
+    ensure_host_devices(8)
+
+
+# -- the pipeline (same program as tests/test_fault_recovery.py) -------
+def _build(rt, n):
+    from repro.core import AccessSpec, Box
+    from repro.executors import device_kernel, kernel_put
+
+    FP = AccessSpec.of((0, -1), (0, 1), (-1, 0), (1, 0), (0, 0))
+    ID = AccessSpec.of((0, 0))
+
+    @device_kernel
+    def jac(region, bufs):
+        (i0, i1), (j0, j1) = region.bounds
+        a = bufs["a"]
+        new = 0.25 * (a[i0 - 1:i1 - 1, j0:j1] + a[i0 + 1:i1 + 1, j0:j1]
+                      + a[i0:i1, j0 - 1:j1 - 1] + a[i0:i1, j0 + 1:j1 + 1])
+        return {"b": kernel_put(bufs["b"], (slice(i0, i1), slice(j0, j1)),
+                                new)}
+
+    @device_kernel
+    def cp(region, bufs):
+        sl = region.to_slices()
+        return {"a": kernel_put(bufs["a"], sl, bufs["b"][sl])}
+
+    a = rt.create("a", (n, n))
+    b = rt.create("b", (n, n))
+    pd = rt.partition_row((n, n))
+    pw = rt.partition_row((n, n), region=Box.make((1, n - 1), (1, n - 1)))
+    data = np.random.default_rng(0).standard_normal((n, n)).astype(np.float32)
+    rt.write(a, data, pd)
+    rt.write(b, data, pd)
+    steps = []
+    for _ in range(5):
+        steps.append(dict(kernel_name="jac", part_id=pw, kernel=jac,
+                          arrays=[a, b], uses={"a": FP}, defs={"b": ID}))
+        steps.append(dict(kernel_name="cp", part_id=pw, kernel=cp,
+                          arrays=[a, b], uses={"b": ID}, defs={"a": ID}))
+    return a, pd, steps
+
+
+def _run(backend, n, nproc, interval=None, specs=None, overlap=False):
+    """One pipeline run; returns (final array, wall seconds, runtime)."""
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.core import HDArrayRuntime
+    from repro.ft.faults import FaultInjector, RecoveryPolicy
+
+    rt = HDArrayRuntime(nproc, backend=backend, overlap=overlap)
+    a, pd, steps = _build(rt, n)
+    with tempfile.TemporaryDirectory() as d:
+        pol = None
+        if interval is not None:
+            pol = RecoveryPolicy(
+                checkpoint=CheckpointManager(d), interval=interval,
+                injector=FaultInjector(specs or []),
+                data_parts={"a": pd, "b": pd})
+        t0 = time.perf_counter()
+        rt.run_pipeline(steps, recovery=pol)
+        dt = time.perf_counter() - t0
+        out = rt.read_coherent(a)
+    return out, dt, rt
+
+
+def _gate(name, out, ref):
+    if not np.array_equal(out, ref):
+        raise SystemExit(f"PARITY FAILURE: {name} diverged from the "
+                         "uninterrupted run")
+
+
+def _restore_bytes(rt) -> int:
+    return sum(e[1] for e in rt.comm_log if e[0].startswith("__restore_"))
+
+
+def main(quick: bool = False) -> dict:
+    _set_flags()
+    import jax
+
+    from repro.ft.faults import FaultSpec
+
+    nproc = 4
+    n = 32 if quick else 256
+    backends = ["sim"]
+    if len(jax.devices()) >= nproc:
+        backends.append("jax")
+    intervals = [1, 2, 5]
+    fault_steps = [0, 5, 9] if not quick else [5]
+
+    rows: List[Dict] = []
+    refs = {}
+    base_wall = {}
+    for backend in backends:
+        refs[backend], base_wall[backend], _ = _run(backend, n, nproc)
+
+    # checkpoint overhead + transient recovery latency per interval
+    for backend in backends:
+        for interval in intervals:
+            out, clean_dt, _rt = _run(backend, n, nproc, interval=interval)
+            _gate(f"{backend} clean interval={interval}", out, refs[backend])
+            for fs in fault_steps:
+                out, dt, rt = _run(backend, n, nproc, interval=interval,
+                                   specs=[fs])
+                _gate(f"{backend} transient@{fs} interval={interval}",
+                      out, refs[backend])
+                rows.append(dict(
+                    backend=backend, scenario="transient", fault_step=fs,
+                    interval=interval, wall_s=dt, clean_wall_s=clean_dt,
+                    base_wall_s=base_wall[backend],
+                    recovery_latency_s=max(0.0, dt - clean_dt),
+                    ckpt_overhead_s=max(0.0, clean_dt - base_wall[backend]),
+                    steps_replayed=rt.planner.stats.steps_replayed,
+                    recoveries=rt.planner.stats.recoveries,
+                    restore_bytes=_restore_bytes(rt),
+                    migration_bytes=0))
+
+    # a torn overlap-scheduled commit (sim; overlap needs host kernels
+    # for nothing — device kernels split fine) and a permanent rank loss
+    for backend in backends:
+        out, dt, rt = _run(backend, n, nproc, interval=2,
+                           specs=[FaultSpec(4, site="commit")],
+                           overlap=(backend == "sim"))
+        _gate(f"{backend} commit-site fault", out, refs[backend])
+        out, dt, rt = _run(backend, n, nproc, interval=2,
+                           specs=[FaultSpec(6, kind="rank", rank=2)])
+        _gate(f"{backend} rank loss", out, refs[backend])
+        rec, = rt.recovery_log
+        rows.append(dict(
+            backend=backend, scenario="rank_loss", fault_step=6,
+            interval=2, wall_s=dt, clean_wall_s=None,
+            base_wall_s=base_wall[backend], recovery_latency_s=None,
+            ckpt_overhead_s=None,
+            steps_replayed=rt.planner.stats.steps_replayed,
+            recoveries=rt.planner.stats.recoveries,
+            restore_bytes=_restore_bytes(rt),
+            migration_bytes=rec["migration_bytes"]))
+        if rt.planner.stats.elastic_shrinks != 1 or not rec["migration_bytes"]:
+            raise SystemExit(f"{backend} rank loss: no planned migration "
+                             "recorded in recovery_log")
+
+    print(f"\n{'backend':<8} {'scenario':<10} {'step':>4} {'intvl':>5} "
+          f"{'replayed':>8} {'latency_ms':>10} {'restoreMB':>9} "
+          f"{'migrateMB':>9}")
+    for r in rows:
+        lat = ("-" if r["recovery_latency_s"] is None
+               else f"{r['recovery_latency_s'] * 1e3:.1f}")
+        print(f"{r['backend']:<8} {r['scenario']:<10} {r['fault_step']:>4} "
+              f"{r['interval']:>5} {r['steps_replayed']:>8} {lat:>10} "
+              f"{r['restore_bytes'] / 1e6:>9.3f} "
+              f"{r['migration_bytes'] / 1e6:>9.3f}")
+
+    # the interval trade, summarized on sim transient rows
+    sim_rows = [r for r in rows
+                if r["backend"] == "sim" and r["scenario"] == "transient"]
+    by_interval = {
+        i: dict(
+            mean_steps_replayed=float(np.mean(
+                [r["steps_replayed"] for r in sim_rows
+                 if r["interval"] == i])),
+            mean_recovery_latency_s=float(np.mean(
+                [r["recovery_latency_s"] for r in sim_rows
+                 if r["interval"] == i])),
+            ckpt_overhead_s=float(np.mean(
+                [r["ckpt_overhead_s"] for r in sim_rows
+                 if r["interval"] == i])))
+        for i in intervals}
+    out = {"quick": quick, "n": n, "nproc": nproc,
+           "backends": backends, "intervals": by_interval}
+    os.makedirs("results", exist_ok=True)
+    dest = ("results/fault_recovery_quick.json" if quick
+            else "results/fault_recovery.json")
+    with open(dest, "w") as f:
+        json.dump({"rows": rows, **out}, f, indent=1)
+    if not quick:
+        with open("BENCH_faults.json", "w") as f:
+            json.dump(out, f, indent=1)
+    print(f"# -> {dest}" + ("" if quick else " + BENCH_faults.json"))
+    print("# parity gates passed: every faulted run was bit-identical "
+          "to the uninterrupted run")
+    return out
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv[1:])

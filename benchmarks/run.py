@@ -55,6 +55,12 @@ def main() -> None:
         # quick sweep here (CI smoke); run the module directly for the
         # full study that regenerates BENCH_executor.json
         executor_residency.main(quick=True)
+    if which in ("all", "faults"):
+        print("\n===== Fault recovery: parity gates + interval trade =====")
+        from . import fault_recovery
+        # seeded chaos smoke (CI): parity gates only; run the module
+        # directly for the full study that regenerates BENCH_faults.json
+        fault_recovery.main(quick=True)
     print(f"\n# benchmarks done in {time.time()-t0:.1f}s")
 
 

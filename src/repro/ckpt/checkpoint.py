@@ -16,6 +16,21 @@ Guarantees:
   * keep-k rotation, and restore() reassembles global arrays with the
     target sharding (supports restoring onto a DIFFERENT mesh => elastic
     restarts after node loss).
+
+Two state families share the directory format:
+
+  * pytree state (``save`` / ``restore``) — the launch/train.py path:
+    jax leaves keyed by tree path, device_put with target shardings,
+  * HDArrayRuntime state (``save_runtime`` / ``restore_runtime``) —
+    global coherent snapshots of every HDArray, keyed ``hda::<name>``.
+    The restore is a PLANNED write through the Executor protocol
+    (``executor.write`` + ``sync_device``), never a raw ``device_put``
+    around the runtime: on a device-resident backend the shards are
+    re-staged and the dirty host mirrors invalidated, with the
+    crossing visible in ``h2d_transfers``.  The earlier HDArray
+    restore path went straight at device memory and left the resident
+    copy stale — the regression test in tests/test_fault_recovery.py
+    pins the counters.
 """
 from __future__ import annotations
 
@@ -23,7 +38,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -62,18 +77,126 @@ class CheckpointManager:
     def save_async(self, step: int, state: Any) -> None:
         self.save(step, state, blocking=False)
 
+    def save_runtime(self, step: int, rt, blocking: bool = True) -> None:
+        """Checkpoint an HDArrayRuntime's arrays as GLOBAL coherent
+        snapshots (assembled via ``sync_host`` + the executor read
+        path), so a restore can land on ANY partition over ANY
+        surviving mesh — the checkpoint is layout-free.  Every array
+        must have coherent cover; a torn mid-commit state has no
+        global value to snapshot.  On a metadata-only executor
+        (``holds_data=False``) the payload is skipped and only the
+        array inventory is recorded."""
+        holds = getattr(rt.executor, "holds_data", True)
+        host: Dict[str, np.ndarray] = {}
+        inventory: Dict[str, Dict[str, Any]] = {}
+        for name, arr in rt.arrays.items():
+            if not arr.coherent_cover():
+                raise ValueError(
+                    f"checkpoint at step {step}: array {name!r} has no "
+                    "coherent cover (mid-commit state cannot be "
+                    "snapshotted)")
+            inventory[name] = {"shape": list(arr.shape),
+                               "dtype": arr.dtype.str}
+            if holds:
+                rt.executor.sync_host(arr)
+                host["hda::" + name] = rt.read_coherent(arr)
+        extra = {"kind": "hdarrays", "holds_data": holds,
+                 "arrays": inventory}
+        if blocking:
+            self._write(step, host, extra)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra), daemon=True)
+            self._thread.start()
+
+    def restore_runtime(self, rt, step: Optional[int] = None,
+                        parts: Optional[Dict[str, int]] = None,
+                        live: Optional[Sequence[int]] = None) -> int:
+        """Restore every checkpointed array into `rt` as a PLANNED
+        write: the payload routes through the Executor protocol
+        (``write`` + ``sync_device``, so a device-resident backend
+        re-stages the shards and its transfer counters see the
+        crossing), and the coherence metadata is rebuilt from the
+        restore partition (:meth:`HDArray.record_restore`), which busts
+        the §4.2 plan caches for the restored arrays.
+
+        ``parts`` maps array name -> restore partition id; arrays not
+        named there (or when ``parts`` is None) restore onto an even
+        dim-0 split over the ``live`` ranks (all ranks by default).
+        The coherence gate rejects any restore partition that leaves a
+        region of the array uncovered — BEFORE any state is touched.
+        Returns the restored step number."""
+        from repro.core.sections import SectionSet
+        from repro.ft.faults import survivor_partition
+
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        holds = (getattr(rt.executor, "holds_data", True)
+                 and meta.get("holds_data", True))
+        data = (np.load(os.path.join(d, f"shard_{self.host_id}.npz"))
+                if holds else None)
+        names = [n for n in meta.get("arrays", rt.arrays) if n in rt.arrays]
+        # gate first: reject the whole restore before mutating anything
+        layouts = {}
+        for name in names:
+            arr = rt.arrays[name]
+            if parts is not None and name in parts:
+                pid = parts[name]
+            else:
+                pid = survivor_partition(
+                    rt, arr.shape,
+                    live if live is not None else range(rt.nproc))
+            part = rt.parts[pid]
+            per_device = tuple(
+                rt._clip_region_to_array(part.region(p), arr)
+                for p in range(rt.nproc))
+            cover = SectionSet.empty(arr.ndim)
+            for s in per_device:
+                cover = cover.union(s)
+            if cover != SectionSet.full(arr.shape):
+                raise ValueError(
+                    f"restore of {name!r} at step {step}: partition "
+                    f"{pid} leaves regions of the array uncovered — "
+                    "restoring would lose checkpointed sections")
+            layouts[name] = per_device
+        for name in names:
+            arr = rt.arrays[name]
+            per_device = layouts[name]
+            payload = np.asarray(data["hda::" + name]) if holds else None
+            rt.executor.write(arr, payload, per_device)
+            arr.record_restore(per_device)
+            # re-stage device residency NOW (counted h2d on resident
+            # backends) instead of leaving a dirty mirror for the next
+            # kernel to trip over mid-pipeline
+            rt.executor.sync_device(arr)
+            nbytes = sum(s.volume() for s in per_device) * arr.itemsize
+            rt.comm_log.append(
+                (f"__restore_{name}", nbytes, ((name, "restore", nbytes),)))
+            rt.planner.stats.checkpoint_restores += 1
+        return step
+
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host: Dict[str, np.ndarray]) -> None:
+    def _write(self, step: int, host: Dict[str, np.ndarray],
+               extra_meta: Optional[Dict[str, Any]] = None) -> None:
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
         np.savez(os.path.join(tmp, f"shard_{self.host_id}.npz"), **host)
         meta = {"step": step, "n_hosts": self.n_hosts,
                 "keys": sorted(host.keys())}
+        if extra_meta:
+            meta.update(extra_meta)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
             f.flush()

@@ -114,6 +114,12 @@ class PlannerStats:
     candidate_pairs: int = 0    # neighbor-index survivors actually visited
     pairs_pruned: int = 0       # all-pairs count minus survivors
     commit_replays: int = 0     # fixpoint commits replayed as O(P) restores
+    # fault-tolerance counters (run_pipeline recovery path)
+    recoveries: int = 0          # fault -> restore -> resume cycles
+    checkpoint_restores: int = 0  # per-array planned restore writes
+    elastic_shrinks: int = 0     # permanent rank losses absorbed
+    straggler_events: int = 0    # StragglerMonitor threshold crossings
+    steps_replayed: int = 0      # pipeline steps re-executed after restore
 
     @property
     def plans_cached(self) -> int:
@@ -123,6 +129,8 @@ class PlannerStats:
         self.plans_computed = self.hits_history = self.hits_state_compare = 0
         self.intersect_ops = self.gdef_updates = self.state_compares = 0
         self.candidate_pairs = self.pairs_pruned = self.commit_replays = 0
+        self.recoveries = self.checkpoint_restores = 0
+        self.elastic_shrinks = self.straggler_events = self.steps_replayed = 0
 
 
 def _access_id(access: Optional[Access]) -> int:

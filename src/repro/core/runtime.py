@@ -76,6 +76,9 @@ class HDArrayRuntime:
         self._scheduler = OverlapScheduler(self.executor) if overlap else None
         self.arrays: Dict[str, HDArray] = {}
         self.comm_log: list = []     # [(kernel, CommPlan bytes, kinds)]
+        # fault-recovery audit trail: one record per recovery cycle
+        # (see run_pipeline's `recovery=` path / docs/fault-tolerance.md)
+        self.recovery_log: list = []
 
     # -- lifecycle ------------------------------------------------------
     def create(self, name: str, shape, dtype=np.float32) -> HDArray:
@@ -144,18 +147,30 @@ class HDArrayRuntime:
         arrays: Sequence[HDArray],
         uses: Dict[str, Access],
         defs: Dict[str, Access],
+        _fault_hook: Optional[Callable[[str], None]] = None,
         **kw,
     ) -> CommPlan:
         """Paper Fig. 3: plan comm (Eqns 1-2) -> move data -> run kernel
         -> commit GDEF updates (Eqns 3-4).  Under ``overlap=True`` the
         move/commit (and, for halos, part of the kernel) run
-        concurrently — see the module docstring."""
+        concurrently — see the module docstring.
+
+        ``_fault_hook`` (recovery-path internal) is called with site
+        ``"commit"`` immediately before the Eqn (3)-(4) commit — under
+        overlap that is on the host thread while messages are still in
+        flight — so fault injection can tear a step mid-commit."""
         part = self.parts[part_id]
         plan = self.planner.plan(kernel_name, part, arrays, uses, defs)
+
+        def _commit() -> None:
+            if _fault_hook is not None:
+                _fault_hook("commit")
+            self.planner.commit(plan, arrays, part)
+
         if self._scheduler is not None:
             self._scheduler.step(
                 plan, part, kernel, arrays, self.arrays, uses, defs, kw,
-                commit=lambda: self.planner.commit(plan, arrays, part))
+                commit=_commit)
         else:
             # one call for the whole plan: collective backends fuse all
             # arrays' messages into a single jitted dispatch
@@ -163,16 +178,31 @@ class HDArrayRuntime:
             if kernel is not None:
                 self.executor.run_kernel(kernel, part.regions, arrays,
                                          defs=tuple(defs), **kw)
-            self.planner.commit(plan, arrays, part)
+            _commit()
         self.log_plan(kernel_name, plan)
         return plan
 
-    def run_pipeline(self, steps: Sequence[Dict]) -> list:
+    def run_pipeline(self, steps: Sequence[Dict],
+                     recovery=None) -> list:
         """Run a program of apply_kernel steps with the Fig. 7 schedule:
         step i+1's planning overlaps step i's message execution.  Each
         step: dict(kernel_name=, part_id=, kernel=, arrays=, uses=,
         defs=, kw={}).  Requires overlap=True; with overlap off it
-        degrades to sequential apply_kernel calls."""
+        degrades to sequential apply_kernel calls.
+
+        With ``recovery`` (a :class:`repro.ft.faults.RecoveryPolicy`)
+        the pipeline survives faults: state checkpoints every
+        ``interval`` steps, a ``TransientFault`` restores the last
+        checkpoint and replays (retry/backoff via StepGuard), and a
+        ``RankLostFault`` additionally shrinks every partition onto the
+        surviving ranks through coherence-gated ``repartition`` before
+        resuming.  Deterministic kernels replay bit-identically — the
+        chaos suite gates on it.  Recovery mode steps serially (per-
+        step §4.2 overlap still applies when ``overlap=True``; the
+        cross-step plan-ahead of the fault-free path would speculate
+        past a checkpoint boundary)."""
+        if recovery is not None:
+            return self._run_pipeline_recoverable(list(steps), recovery)
         if self._scheduler is None:
             return [self.apply_kernel(
                         st["kernel_name"], st["part_id"], st["kernel"],
@@ -180,6 +210,134 @@ class HDArrayRuntime:
                         **st.get("kw", {}))
                     for st in steps]
         return self._scheduler.pipeline(self, list(steps))
+
+    # -- fault-tolerant pipeline (docs/fault-tolerance.md) ---------------
+    def _run_pipeline_recoverable(self, steps: list, policy) -> list:
+        # ft imports stay function-local: repro.ft imports repro.core
+        from repro.ft.faults import RankLostFault, StepGuard
+
+        if policy.checkpoint is None:
+            raise ValueError("RecoveryPolicy.checkpoint is required: "
+                             "recovery without a restore point cannot "
+                             "replay")
+        cm = policy.checkpoint
+        stats = self.planner.stats
+        n = len(steps)
+        steps = [dict(st) for st in steps]   # part_ids rewritten on shrink
+        plans: list = [None] * n
+        live = sorted(range(self.nproc))
+        saved: set = set()
+
+        def restore_fn():
+            k = cm.restore_runtime(self, parts=policy.data_parts,
+                                   live=live)
+            return k, None
+
+        guard = StepGuard(restore_fn, max_retries=policy.max_retries,
+                          backoff=policy.backoff, sleep=policy.sleep)
+        i = 0
+        while i < n:
+            if (policy.interval and i % policy.interval == 0
+                    and i not in saved):
+                cm.save_runtime(i, self)
+                saved.add(i)
+            t0 = policy.clock()
+            try:
+                out, replay = guard.run(
+                    i, lambda st=steps[i], k=i: self._guarded_step(
+                        st, policy.injector, k))
+            except RankLostFault as e:
+                restored = self._recover_rank_loss(e.rank, policy, steps,
+                                                   live)
+                stats.recoveries += 1
+                stats.steps_replayed += i - restored
+                i = restored
+                continue
+            if replay is not None:
+                restored, _state = replay
+                stats.recoveries += 1
+                stats.steps_replayed += i - restored
+                i = restored
+                continue
+            dt = policy.clock() - t0
+            if (policy.monitor is not None
+                    and policy.monitor.observe(i, dt)):
+                stats.straggler_events += 1
+            plans[i] = out
+            i += 1
+        return plans
+
+    def _guarded_step(self, st: Dict, injector, i: int) -> CommPlan:
+        if injector is not None:
+            injector.maybe_fail(i, site="step")
+            hook = lambda site: injector.maybe_fail(i, site=site)  # noqa: E731
+        else:
+            hook = None
+        return self.apply_kernel(
+            st["kernel_name"], st["part_id"], st["kernel"], st["arrays"],
+            st["uses"], st["defs"], _fault_hook=hook, **st.get("kw", {}))
+
+    def _recover_rank_loss(self, rank: int, policy, steps: list,
+                           live: list) -> int:
+        """The planned-shrink path: mark the rank dead (coherence
+        metadata + executor buffers), restore the checkpoint onto a
+        staging layout over the survivors, repartition every array onto
+        its shrunken canonical layout (a PLANNED migration, coherence-
+        gated, visible in comm_log), and rewrite the remaining steps'
+        work partitions onto the surviving ranks.  Returns the step to
+        resume from."""
+        from repro.ft.faults import (ElasticPlan, inherit_partition,
+                                     shrink_partition, survivor_partition)
+
+        if rank in live:
+            live.remove(rank)
+        if not live:
+            raise RuntimeError(f"rank {rank} lost and no survivors remain")
+        for arr in self.arrays.values():
+            arr.mark_rank_lost(rank)
+            self.executor.drop_rank(arr, rank)
+        # restore staging: survivors keep their checkpointed sections
+        # where the old data layout permits (inherit), else an even
+        # survivor split; then rebalance with a planned repartition
+        data_parts = dict(policy.data_parts or {})
+        staging: Dict[str, int] = {}
+        targets: Dict[str, int] = {}
+        for name, arr in self.arrays.items():
+            if name in data_parts:
+                pid = inherit_partition(self, data_parts[name], live)
+                if pid is None:
+                    pid = survivor_partition(self, arr.shape, live)
+                staging[name] = pid
+                targets[name] = shrink_partition(self, data_parts[name],
+                                                 live)
+            else:
+                pid = survivor_partition(self, arr.shape, live)
+                staging[name] = pid
+                targets[name] = pid
+        restored = cm_step = policy.checkpoint.restore_runtime(
+            self, parts=staging, live=live)
+        migration = 0
+        for name, arr in self.arrays.items():
+            if targets[name] != staging[name]:
+                plan = self.repartition(arr, staging[name], targets[name])
+                migration += plan.bytes_total
+        if policy.data_parts is not None:
+            policy.data_parts.update(targets)
+        # remaining steps' WORK partitions shrink onto the survivors too
+        remap: Dict[int, int] = {}
+        for st in steps:
+            pid = st["part_id"]
+            if pid not in remap:
+                remap[pid] = shrink_partition(self, pid, live)
+            st["part_id"] = remap[pid]
+        self.planner.stats.elastic_shrinks += 1
+        self.recovery_log.append({
+            "kind": "rank_loss", "rank": rank,
+            "restored_step": restored, "live": list(live),
+            "migration_bytes": migration,
+            "plan": ElasticPlan(len(live) + 1, len(live),
+                                (len(live),), migration)})
+        return cm_step
 
     def log_plan(self, kernel_name: str, plan: CommPlan) -> None:
         self.comm_log.append(

@@ -32,7 +32,17 @@ the four runtime actions the paper's library issues (§5):
   coherent) sections, then the global combine tree over the partials.
   The runtime routes every reduce through the planner first, so by the
   time ``reduce_local`` runs each device's region is up to date — no
-  backend ever reads stale buffer contents.
+  backend ever reads stale buffer contents,
+* ``drop_rank`` — the fault hook: rank p's buffer for an array is gone
+  (device loss).  Backends discard/poison that buffer so nothing can
+  silently read stale bytes; the recovery path (checkpoint restore +
+  repartition, see docs/fault-tolerance.md) is responsible for never
+  planning a read of a dead rank.
+
+``holds_data`` (class attribute) tells the checkpoint layer whether
+this backend materializes real array bytes (sim/jax) or is metadata-
+only (null) — metadata-only checkpoints skip the payload and restores
+skip the data write, exercising the planning path alone.
 
 Backends register with :func:`register_executor` and are constructed by
 name via :func:`make_executor` — the hook behind
@@ -65,8 +75,11 @@ class Executor(Protocol):
     bytes_moved: int
     messages_executed: int
     reduce_elements: int
+    holds_data: bool
 
     def allocate(self, arr: "HDArray") -> None: ...
+
+    def drop_rank(self, arr: "HDArray", rank: int) -> None: ...
 
     def free(self, arr: "HDArray") -> None: ...
 

@@ -239,6 +239,16 @@ class JaxExecutor(SimExecutor):
             self._host_ok.pop(arr.name, None)
             self._device_ok.pop(arr.name, None)
 
+    def drop_rank(self, arr: "HDArray", rank: int) -> None:
+        """Simulated device loss: pull the survivors' state down to the
+        host mirrors, poison the dead rank's mirror (Sim semantics), and
+        invalidate the resident copy — the recovery path re-stages the
+        array with sync_device after the restore write."""
+        with self._lock:
+            self.sync_host(arr)
+            super().drop_rank(arr, rank)
+            self._device_ok[arr.name] = False
+
     # -- controller I/O (host-mirror paths) -----------------------------
     def write(self, arr: "HDArray", data: np.ndarray,
               per_device: Sequence["SectionSet"]) -> None:

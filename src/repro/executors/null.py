@@ -26,6 +26,8 @@ if TYPE_CHECKING:
 class NullExecutor(SimExecutor):
     """Counts plan traffic without holding any data."""
 
+    holds_data = False  # checkpoints carry metadata only, no payload
+
     def allocate(self, arr: "HDArray") -> None:
         self.buffers[arr.name] = None
 

@@ -31,6 +31,8 @@ REDUCE_COMBINE = {"sum": np.add, "prod": np.multiply,
 class SimExecutor:
     """Executes plans over per-device full-size numpy buffers."""
 
+    holds_data = True   # this backend materializes real array bytes
+
     def __init__(self, nproc: Optional[int] = None) -> None:
         # nproc is accepted for uniform registry construction; the sim
         # backend sizes everything from the arrays it allocates.
@@ -47,6 +49,16 @@ class SimExecutor:
 
     def free(self, arr: "HDArray") -> None:
         self.buffers.pop(arr.name, None)
+
+    def drop_rank(self, arr: "HDArray", rank: int) -> None:
+        """Device `rank` died: poison its buffer so any read of the lost
+        bytes that slips past the recovery machinery is loud (NaN for
+        float arrays) instead of silently stale."""
+        bufs = self.buffers.get(arr.name)
+        if bufs is None:
+            return
+        buf = bufs[rank]
+        buf[...] = np.nan if np.issubdtype(buf.dtype, np.floating) else 0
 
     # -- data movement --------------------------------------------------
     def write(self, arr: "HDArray", data: np.ndarray,

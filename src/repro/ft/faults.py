@@ -1,31 +1,125 @@
-"""Fault tolerance for 1000+-node operation.
+"""Fault tolerance: planned recovery for the HDArray runtime.
+
+The paper's unified model plans ALL data movement from def/use
+information (Eqns (1)-(4)), which makes a rank loss just another
+planned event: restore the owned sections from checkpoint, let the
+planner derive the traffic that re-covers the lost regions on the
+surviving mesh, and resume.  Runtime systems that manage heterogeneous
+device pools for the user (EngineCL, HaoCL) treat device dropout and
+rebalancing as a scheduler responsibility, not an application one —
+this module is that scheduler layer for ``HDArrayRuntime.run_pipeline``
+(see :meth:`repro.core.runtime.HDArrayRuntime.run_pipeline` with a
+``recovery=`` policy, and docs/fault-tolerance.md for the state
+machine).
 
 Components:
-  * StepGuard — wraps the train step; on a transient failure (device
-    OOM-retry, preemption signal, injected fault) it restores the last
-    committed checkpoint and replays the data stream (deterministic
-    pipeline => exact-token replay).
+  * FaultSpec / FaultInjector — deterministic fault injection for
+    tests/benchmarks: transient faults and permanent rank losses, at
+    the ``"step"`` site (before a step executes) or the ``"commit"``
+    site (mid-step, while the Eqn (3)-(4) commit runs — under overlap
+    that is concurrent with in-flight messages).
+  * StepGuard — retry-with-restore wrapper: on a TransientFault it
+    backs off (exponential, injectable sleep) and restores the last
+    committed checkpoint; deterministic pipelines replay exactly.
   * StragglerMonitor — EWMA of per-step wall time; flags steps slower
-    than `threshold` x the moving average.  On real pods the hook
-    triggers re-sharding away from the slow host; here it records and
-    (optionally) executes an HDArray repartition (the paper's
-    'repartition at any point' is the mitigation primitive).
-  * ElasticPlan — given a lost/gained device set, produce the new mesh
-    shape + the HDArray migration plan for the param arrays.
+    than ``threshold`` x the moving average.  ``run_pipeline`` feeds it
+    per-step timings and surfaces crossings in
+    ``PlannerStats.straggler_events``.
+  * RecoveryPolicy — everything run_pipeline needs to survive faults:
+    the CheckpointManager + interval, the injector/monitor hooks, and
+    the retry/backoff knobs.
+  * ElasticPlan / plan_elastic_rescale — given a lost/gained device
+    set, the new mesh shape + the HDArray migration volume (planned,
+    metadata-only).
+  * shrink_partition / inherit_partition / survivor_partition — the
+    partition algebra of a mesh shrink: redistribute a partition's
+    coverage over the surviving ranks (the repartition target), or let
+    a successor rank inherit a dead rank's region (the restore
+    staging layout, so the follow-up repartition is a real planned
+    rebalance).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
+from repro.core.partition import _even_splits
+from repro.core.sections import Box, SectionSet
+
+if TYPE_CHECKING:
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.core.runtime import HDArrayRuntime
+
 
 class TransientFault(RuntimeError):
-    """A recoverable failure (preemption, link flap, injected)."""
+    """A recoverable failure (preemption, link flap, injected).  The
+    device pool is intact: restore + replay suffices."""
 
 
+class RankLostFault(RuntimeError):
+    """A PERMANENT rank loss: the device and every byte it held are
+    gone.  Recovery must restore the lost sections from checkpoint and
+    repartition onto the surviving mesh (not a TransientFault — retry
+    cannot bring the rank back)."""
+
+    def __init__(self, rank: int, msg: Optional[str] = None):
+        super().__init__(msg or f"rank {rank} lost")
+        self.rank = rank
+
+
+# -- deterministic fault injection --------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One planned fault: fire `times` times when execution reaches
+    pipeline step `step` at injection site `site`."""
+    step: int
+    site: str = "step"          # "step" (before execution) | "commit"
+    kind: str = "transient"     # "transient" | "rank"
+    rank: int = 0               # the rank that dies (kind="rank")
+    times: int = 1
+
+
+class FaultInjector:
+    """Deterministic fault injection for tests/benchmarks.
+
+    ``fail_at`` accepts bare step numbers (one transient fault each,
+    the seed-era behavior) or :class:`FaultSpec` entries for full
+    control over site / kind / repetition.  ``log`` records every
+    fault actually fired as ``(step, site, kind)``.
+    """
+
+    def __init__(self, fail_at: Sequence = (), site: str = "step",
+                 kind: str = "transient", rank: int = 0, times: int = 1):
+        self.specs: Tuple[FaultSpec, ...] = tuple(
+            sp if isinstance(sp, FaultSpec)
+            else FaultSpec(int(sp), site, kind, rank, times)
+            for sp in fail_at)
+        self._count = [0] * len(self.specs)
+        self.fired: set = set()
+        self.log: List[Tuple[int, str, str]] = []
+
+    @property
+    def fail_at(self) -> set:
+        return {sp.step for sp in self.specs}
+
+    def maybe_fail(self, step: int, site: str = "step") -> None:
+        for j, sp in enumerate(self.specs):
+            if sp.step == step and sp.site == site and self._count[j] < sp.times:
+                self._count[j] += 1
+                self.fired.add(step)
+                self.log.append((step, site, sp.kind))
+                if sp.kind == "rank":
+                    raise RankLostFault(
+                        sp.rank, f"injected loss of rank {sp.rank} at step "
+                                 f"{step} ({site})")
+                raise TransientFault(f"injected fault at step {step} ({site})")
+
+
+# -- straggler detection ------------------------------------------------
 @dataclasses.dataclass
 class StragglerEvent:
     step: int
@@ -59,13 +153,23 @@ class StragglerMonitor:
         return is_straggler
 
 
+# -- retry/backoff ------------------------------------------------------
 class StepGuard:
-    """Retry-with-restore wrapper around the train step."""
+    """Retry-with-restore wrapper around a step.
+
+    On a TransientFault: back off (exponential in the consecutive-retry
+    count, ``sleep`` injectable for tests), call ``restore_fn`` (which
+    returns ``(restored_step, state)``), and signal replay-from.  More
+    than ``max_retries`` consecutive faults re-raise — the fault is not
+    transient after all."""
 
     def __init__(self, restore_fn: Callable[[], Tuple[int, object]],
-                 max_retries: int = 3):
+                 max_retries: int = 3, backoff: float = 0.0,
+                 sleep: Callable[[float], None] = time.sleep):
         self.restore_fn = restore_fn
         self.max_retries = max_retries
+        self.backoff = backoff
+        self.sleep = sleep
         self.retries = 0
         self.recoveries: List[int] = []
 
@@ -79,11 +183,131 @@ class StepGuard:
             self.retries += 1
             if self.retries > self.max_retries:
                 raise
+            if self.backoff:
+                self.sleep(self.backoff * (2 ** (self.retries - 1)))
             restored_step, state = self.restore_fn()
             self.recoveries.append(step)
             return None, (restored_step, state)
 
 
+# -- the recovery policy -------------------------------------------------
+@dataclasses.dataclass
+class RecoveryPolicy:
+    """What ``run_pipeline(steps, recovery=...)`` needs to survive
+    faults.  ``checkpoint`` + ``interval`` bound the replay window;
+    ``data_parts`` (array name -> partition id) names each array's
+    canonical data layout so a mesh shrink can stage restores on the
+    inherit layout and rebalance with a planned repartition; ``clock``
+    and ``sleep`` are injectable for deterministic tests."""
+    checkpoint: Optional["CheckpointManager"] = None
+    interval: int = 1
+    injector: Optional[FaultInjector] = None
+    monitor: Optional[StragglerMonitor] = None
+    max_retries: int = 3
+    backoff: float = 0.0
+    data_parts: Optional[Dict[str, int]] = None
+    clock: Callable[[], float] = time.perf_counter
+    sleep: Callable[[float], None] = time.sleep
+
+
+# -- partition algebra of a mesh shrink ----------------------------------
+def _empty_box(ndim: int) -> Box:
+    return Box(tuple((0, 0) for _ in range(ndim)))
+
+
+def coverage_box(regions: Sequence[Box]) -> Box:
+    """The single Box the non-empty regions tile exactly.  Raises when
+    the union is not a box (a shrink of non-convex coverage would
+    either drop or invent work items)."""
+    live = [r for r in regions if not r.is_empty()]
+    if not live:
+        raise ValueError("partition has no non-empty regions")
+    union = SectionSet.of(*live)
+    lo, hi = union.bbox_bounds()
+    bbox = Box(tuple((int(a), int(b)) for a, b in zip(lo, hi)))
+    if union.volume() != bbox.volume():
+        raise ValueError(
+            f"partition coverage {union} does not tile a box; cannot "
+            "shrink it automatically — pass explicit survivor regions")
+    return bbox
+
+
+def shrink_partition(rt: "HDArrayRuntime", part_id: int,
+                     live: Sequence[int]) -> int:
+    """The repartition TARGET of a mesh shrink: re-split the
+    partition's coverage box evenly over the surviving ranks (dim-0
+    contiguous chunks, like the paper's ``HDArrayPartition``); dead
+    ranks get empty regions.  Returns the new partition id."""
+    part = rt.parts[part_id]
+    live = sorted(live)
+    bbox = coverage_box(part.regions)
+    nd = len(bbox.bounds)
+    lo0, hi0 = bbox.bounds[0]
+    splits = _even_splits(hi0 - lo0, len(live))
+    regions = [_empty_box(nd)] * part.nproc
+    for j, p in enumerate(live):
+        b = list(bbox.bounds)
+        b[0] = (lo0 + splits[j][0], lo0 + splits[j][1])
+        regions[p] = Box(tuple(b))
+    return rt.partition_manual(part.domain, regions)
+
+
+def inherit_partition(rt: "HDArrayRuntime", part_id: int,
+                      live: Sequence[int]) -> Optional[int]:
+    """The restore STAGING layout of a mesh shrink: each dead rank's
+    region is absorbed by a surviving rank whose region merges with it
+    into an exact box (nearest live rank first), so survivors keep
+    their old sections and only the lost sections are re-homed.  The
+    follow-up ``repartition`` to :func:`shrink_partition`'s even
+    layout is then a genuine planned rebalance.  Returns None when no
+    exact-box merge exists (caller falls back to the even layout)."""
+    part = rt.parts[part_id]
+    live_set = sorted(live)
+    dead = [p for p in range(part.nproc) if p not in set(live_set)]
+    regions = list(part.regions)
+    nd = len(part.domain)
+    for r in dead:
+        box = regions[r]
+        regions[r] = _empty_box(nd)
+        if box.is_empty():
+            continue
+        placed = False
+        for p in sorted(live_set, key=lambda q: (abs(q - r), q)):
+            pr = regions[p]
+            if pr.is_empty():
+                regions[p] = box
+                placed = True
+                break
+            merged = Box(tuple((min(alo, blo), max(ahi, bhi))
+                               for (alo, ahi), (blo, bhi)
+                               in zip(pr.bounds, box.bounds)))
+            if merged.volume() == pr.volume() + box.volume():
+                regions[p] = merged
+                placed = True
+                break
+        if not placed:
+            return None
+    return rt.partition_manual(part.domain, regions)
+
+
+def survivor_partition(rt: "HDArrayRuntime", shape: Sequence[int],
+                       live: Sequence[int]) -> int:
+    """An even dim-0 split of the FULL array domain over the surviving
+    ranks — the default checkpoint-restore layout (always covers the
+    array, so the coherence gate passes whenever live is non-empty)."""
+    shape = tuple(int(s) for s in shape)
+    live = sorted(live)
+    nd = len(shape)
+    splits = _even_splits(shape[0], len(live))
+    regions = [_empty_box(nd)] * rt.nproc
+    for j, p in enumerate(live):
+        b = [(0, s) for s in shape]
+        b[0] = splits[j]
+        regions[p] = Box(tuple(b))
+    return rt.partition_manual(shape, regions)
+
+
+# -- elasticity accounting ----------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class ElasticPlan:
     """Re-shape plan after node loss/gain: new mesh + data migration."""
@@ -97,16 +321,13 @@ def plan_elastic_rescale(n_params: int, itemsize: int, old_devices: int,
                          new_devices: int, model_axis: int) -> ElasticPlan:
     """Pick the new mesh and estimate the migration volume via the
     HDArray repartition planner (ROW repartition of the flattened param
-    space from `old` to `new` shards)."""
+    space from `old` to `new` shards).  Metadata-only: the plan runs on
+    the ``null`` backend, no parameter bytes are materialized."""
     from repro.core import HDArrayRuntime
-    # metadata-only: one flattened "param" HDArray, row partitions
     rows = max(old_devices, new_devices)
-    rt = HDArrayRuntime(rows)
-    import numpy as _np
+    rt = HDArrayRuntime(rows, backend="null")
     h = rt.create("params", (rows, max(1, n_params // rows)),
-                  dtype=_np.float32 if itemsize == 4 else _np.float16)
-    from repro.core.partition import _even_splits
-    from repro.core.sections import Box
+                  dtype=np.float32 if itemsize == 4 else np.float16)
 
     def manual(n_live):
         splits = _even_splits(rows, n_live)
@@ -115,21 +336,8 @@ def plan_elastic_rescale(n_params: int, itemsize: int, old_devices: int,
         return rt.partition_manual((rows, h.shape[1]), regions)
 
     p_old, p_new = manual(old_devices), manual(new_devices)
-    rt.write(h, _np.zeros(h.shape, h.dtype), p_old)
+    rt.write(h, None, p_old)
     plan = rt.repartition(h, p_old, p_new)
     data_axis = new_devices // model_axis
     return ElasticPlan(old_devices, new_devices,
                        (data_axis, model_axis), plan.bytes_total)
-
-
-class FaultInjector:
-    """Deterministic fault injection for tests/benchmarks."""
-
-    def __init__(self, fail_at: Sequence[int] = ()):
-        self.fail_at = set(fail_at)
-        self.fired = set()
-
-    def maybe_fail(self, step: int) -> None:
-        if step in self.fail_at and step not in self.fired:
-            self.fired.add(step)
-            raise TransientFault(f"injected fault at step {step}")

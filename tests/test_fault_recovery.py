@@ -1,0 +1,394 @@
+"""Chaos suite: seeded fault injection over a Jacobi run_pipeline.
+
+Every test runs a 10-step Jacobi pipeline (5 x [stencil, copy-back])
+under a deterministic :class:`FaultInjector` and gates on BIT-IDENTICAL
+final state vs the uninterrupted run — the recovery path (checkpoint
+restore + planned repartition, docs/fault-tolerance.md) must be
+invisible in the values:
+
+  * transient faults at the first / middle / last step, on sim and jax,
+  * repeated faults (same step twice, and two distinct steps),
+  * a fault DURING the overlap-scheduled commit (the torn mid-step
+    state: messages executed, Eqns (3)-(4) not committed),
+  * permanent rank loss at every step (sim) / a subset (jax), with the
+    recovery traffic visible in comm_log and recovery_log,
+  * the metadata-only null backend, gated on counters + comm_log,
+  * the residency regression: restore must route through the Executor
+    protocol (``write`` + ``sync_device``) — counter-asserted,
+  * a hypothesis property: any partition pair x any mesh shrink
+    preserves values vs the numpy oracle, and the coherence gate
+    rejects restores with uncovered regions.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # soft dep: property tests skip, chaos tests still run
+    class _StubStrategy:
+        """Absorbs strategy expressions built at import time."""
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _StubStrategy()
+
+    def _skip_without_hypothesis(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    given = settings = _skip_without_hypothesis
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core import AccessSpec, Box, HDArrayRuntime
+from repro.executors import device_kernel, kernel_put
+from repro.ft.faults import (FaultInjector, FaultSpec, RecoveryPolicy,
+                             StragglerMonitor, survivor_partition)
+
+FP = AccessSpec.of((0, -1), (0, 1), (-1, 0), (1, 0), (0, 0))
+ID = AccessSpec.of((0, 0))
+N = 16
+NPROC = 4
+STEPS = 10     # 5 x (jacobi + copy-back)
+
+
+def _need_devices(n):
+    import jax
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} host devices (XLA_FLAGS not applied?)")
+
+
+# one kernel source for every backend (device-marked: jax runs it
+# resident, sim/null apply the returned buffers to mirrors)
+@device_kernel
+def _jac(region, bufs):
+    (i0, i1), (j0, j1) = region.bounds
+    a = bufs["a"]
+    new = 0.25 * (a[i0 - 1:i1 - 1, j0:j1] + a[i0 + 1:i1 + 1, j0:j1]
+                  + a[i0:i1, j0 - 1:j1 - 1] + a[i0:i1, j0 + 1:j1 + 1])
+    return {"b": kernel_put(bufs["b"], (slice(i0, i1), slice(j0, j1)), new)}
+
+
+@device_kernel
+def _cp(region, bufs):
+    sl = region.to_slices()
+    return {"a": kernel_put(bufs["a"], sl, bufs["b"][sl])}
+
+
+def _build(rt, materialized=True):
+    a = rt.create("a", (N, N))
+    b = rt.create("b", (N, N))
+    pd = rt.partition_row((N, N))
+    pw = rt.partition_row((N, N), region=Box.make((1, N - 1), (1, N - 1)))
+    data = np.random.default_rng(0).standard_normal((N, N)).astype(np.float32)
+    rt.write(a, data if materialized else None, pd)
+    rt.write(b, data if materialized else None, pd)
+    steps = []
+    kern_jac = _jac if materialized else None
+    kern_cp = _cp if materialized else None
+    for _ in range(STEPS // 2):
+        steps.append(dict(kernel_name="jac", part_id=pw, kernel=kern_jac,
+                          arrays=[a, b], uses={"a": FP}, defs={"b": ID}))
+        steps.append(dict(kernel_name="cp", part_id=pw, kernel=kern_cp,
+                          arrays=[a, b], uses={"b": ID}, defs={"a": ID}))
+    return a, b, pd, steps
+
+
+def _reference(backend):
+    rt = HDArrayRuntime(NPROC, backend=backend)
+    a, _b, _pd, steps = _build(rt)
+    rt.run_pipeline(steps)
+    return rt.read_coherent(a)
+
+
+def _run_faulted(backend, specs, interval=3, overlap=False):
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(NPROC, backend=backend, overlap=overlap)
+        a, _b, pd, steps = _build(rt)
+        pol = RecoveryPolicy(checkpoint=CheckpointManager(d),
+                             interval=interval,
+                             injector=FaultInjector(specs),
+                             data_parts={"a": pd, "b": pd})
+        rt.run_pipeline(steps, recovery=pol)
+        out = rt.read_coherent(a)
+    return rt, out, pol
+
+
+# ---------------------------------------------------------------------
+# transient sweep: fault at EVERY step (sim), first/middle/last (jax)
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("step", range(STEPS))
+def test_transient_sweep_sim(step):
+    ref = _reference("sim")
+    rt, out, _pol = _run_faulted("sim", [step])
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.recoveries == 1
+    assert rt.planner.stats.checkpoint_restores == 2   # two arrays
+    assert any(e[0].startswith("__restore_") for e in rt.comm_log)
+
+
+@pytest.mark.parametrize("step", [0, 5, STEPS - 1])
+def test_transient_sweep_jax(step):
+    _need_devices(NPROC)
+    ref = _reference("jax")
+    rt, out, _pol = _run_faulted("jax", [step])
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.recoveries == 1
+
+
+def test_repeated_fault_same_step_sim():
+    ref = _reference("sim")
+    rt, out, _pol = _run_faulted("sim", [FaultSpec(5, times=2)])
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.recoveries == 2
+
+
+def test_repeated_faults_distinct_steps_sim():
+    ref = _reference("sim")
+    rt, out, _pol = _run_faulted("sim", [2, 7])
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.recoveries == 2
+    assert rt.planner.stats.steps_replayed >= 2
+
+
+def test_exhausted_retries_reraise():
+    # more consecutive faults at one step than max_retries allows: the
+    # fault is not transient after all and must surface to the caller
+    from repro.ft.faults import TransientFault
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(NPROC)
+        _a, _b, pd, steps = _build(rt)
+        pol = RecoveryPolicy(checkpoint=CheckpointManager(d), interval=2,
+                             injector=FaultInjector([FaultSpec(4, times=5)]),
+                             max_retries=2,
+                             data_parts={"a": pd, "b": pd})
+        with pytest.raises(TransientFault):
+            rt.run_pipeline(steps, recovery=pol)
+
+
+# ---------------------------------------------------------------------
+# mid-commit tears (messages executed, Eqns (3)-(4) not committed)
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("overlap", [False, True])
+def test_fault_during_commit(overlap):
+    ref = _reference("sim")
+    rt, out, pol = _run_faulted("sim", [FaultSpec(4, site="commit")],
+                                overlap=overlap)
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.recoveries == 1
+    assert pol.injector.log == [(4, "commit", "transient")]
+
+
+def test_fault_during_commit_jax():
+    _need_devices(NPROC)
+    ref = _reference("jax")
+    rt, out, _pol = _run_faulted("jax", [FaultSpec(3, site="commit")])
+    assert np.array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------
+# permanent rank loss: every step (sim), subset (jax)
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("step", range(STEPS))
+def test_rank_loss_sweep_sim(step):
+    ref = _reference("sim")
+    rt, out, _pol = _run_faulted(
+        "sim", [FaultSpec(step, kind="rank", rank=2)])
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.elastic_shrinks == 1
+    assert rt.planner.stats.recoveries == 1
+    # recovery traffic is a PLANNED event: restore writes and the
+    # rebalancing repartition both land in comm_log
+    assert any(e[0].startswith("__restore_") for e in rt.comm_log)
+    assert any(e[0].startswith("__repartition_") for e in rt.comm_log)
+    rec, = rt.recovery_log
+    assert rec["kind"] == "rank_loss" and rec["rank"] == 2
+    assert rec["live"] == [0, 1, 3]
+    assert rec["plan"].new_devices == NPROC - 1
+    assert rec["migration_bytes"] > 0
+    # the dead rank holds nothing afterwards
+    for arr in rt.arrays.values():
+        assert arr.valid[2].is_empty()
+
+
+@pytest.mark.parametrize("step", [0, 4, STEPS - 1])
+def test_rank_loss_jax(step):
+    _need_devices(NPROC)
+    ref = _reference("jax")
+    rt, out, _pol = _run_faulted("jax", [FaultSpec(step, kind="rank", rank=1)])
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.elastic_shrinks == 1
+    assert rt.recovery_log[0]["live"] == [0, 2, 3]
+
+
+def test_two_rank_losses_sim():
+    ref = _reference("sim")
+    rt, out, _pol = _run_faulted("sim", [FaultSpec(3, kind="rank", rank=1),
+                                        FaultSpec(7, kind="rank", rank=3)])
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.elastic_shrinks == 2
+    assert rt.recovery_log[-1]["live"] == [0, 2]
+
+
+# ---------------------------------------------------------------------
+# null backend: the planning path alone, gated on counters + comm_log
+# ---------------------------------------------------------------------
+def test_null_backend_recovery_counters():
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(NPROC, backend="null")
+        _a, _b, pd, steps = _build(rt, materialized=False)
+        pol = RecoveryPolicy(
+            checkpoint=CheckpointManager(d), interval=2,
+            injector=FaultInjector([4, FaultSpec(7, kind="rank", rank=3)]),
+            data_parts={"a": pd, "b": pd})
+        rt.run_pipeline(steps, recovery=pol)
+    stats = rt.planner.stats
+    assert stats.recoveries == 2
+    assert stats.elastic_shrinks == 1
+    assert stats.checkpoint_restores == 4          # 2 arrays x 2 restores
+    restores = [e for e in rt.comm_log if e[0].startswith("__restore_")]
+    assert len(restores) == 4
+    assert all(e[1] > 0 for e in restores)         # planned restore bytes
+    assert rt.recovery_log[0]["migration_bytes"] > 0
+
+
+# ---------------------------------------------------------------------
+# residency regression: restore must route through the protocol
+# ---------------------------------------------------------------------
+def test_restore_routes_through_sync_device_jax():
+    """Seed-era restore bypassed residency (raw device_put around the
+    runtime): the resident copy stayed stale and the next kernel read
+    pre-restore bytes.  restore_runtime must instead route through
+    ``executor.write`` + ``sync_device`` — asserted via the transfer
+    counters: one h2d re-stage per restored array, and the restored
+    values must be what the DEVICE then computes with."""
+    _need_devices(NPROC)
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(NPROC, backend="jax")
+        a, _b, pd, steps = _build(rt)
+        ex = rt.executor
+        cm = CheckpointManager(d)
+        rt.run_pipeline(steps[:4])             # device-resident now
+        cm.save_runtime(4, rt)
+        snap = rt.read_coherent(a).copy()
+        rt.run_pipeline(steps[4:8])            # advance past the snapshot
+        assert not np.array_equal(rt.read_coherent(a), snap)
+        h2d0, d2h0 = ex.h2d_transfers, ex.d2h_transfers
+        cm.restore_runtime(rt)
+        # one sync_device re-stage per array — the fix under test.  The
+        # write path may first d2h-sync a stale mirror, but the restore
+        # must END device-resident:
+        assert ex.h2d_transfers == h2d0 + 2
+        assert ex._device_ok["a"] and ex._device_ok["b"]
+        assert np.array_equal(rt.read_coherent(a), snap)
+        # and the post-restore pipeline runs FROM the device copy with
+        # no further h2d staging
+        h2d1 = ex.h2d_transfers
+        rt.run_pipeline(steps[4:8])
+        assert ex.h2d_transfers == h2d1
+        ref = _reference("jax")
+        rt.run_pipeline(steps[8:])
+        assert np.array_equal(rt.read_coherent(a), ref)
+
+
+# ---------------------------------------------------------------------
+# straggler wiring: per-step timings feed the monitor -> PlannerStats
+# ---------------------------------------------------------------------
+def test_straggler_surfaces_in_planner_stats():
+    clock_vals = iter(
+        [0.0, 1.0] * 6 + [100.0, 110.0] + [200.0, 201.0] * 3)
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(NPROC)
+        _a, _b, pd, steps = _build(rt)
+        pol = RecoveryPolicy(checkpoint=CheckpointManager(d), interval=5,
+                             monitor=StragglerMonitor(threshold=2.0,
+                                                      warmup=3),
+                             clock=lambda: next(clock_vals),
+                             data_parts={"a": pd, "b": pd})
+        rt.run_pipeline(steps, recovery=pol)
+    assert rt.planner.stats.straggler_events == 1
+    ev, = pol.monitor.events
+    assert ev.step == 6 and ev.duration == 10.0
+
+
+# ---------------------------------------------------------------------
+# hypothesis property: any partition pair x any mesh shrink
+# ---------------------------------------------------------------------
+def _make_partition(rt, ptype, shape, rng):
+    if ptype == "row":
+        return rt.partition_row(shape)
+    if ptype == "col":
+        return rt.partition_col(shape)
+    if ptype == "block":
+        return rt.partition_block(shape)
+    # manual: uneven contiguous dim-0 chunks
+    cuts = sorted(rng.choice(range(1, shape[0]), size=rt.nproc - 1,
+                             replace=False)) if rt.nproc > 1 else []
+    lows = [0] + [int(c) for c in cuts]
+    highs = [int(c) for c in cuts] + [shape[0]]
+    return rt.partition_manual(shape, [
+        Box.make((lo, hi), (0, shape[1])) for lo, hi in zip(lows, highs)])
+
+
+@given(old_ptype=st.sampled_from(["row", "col", "block", "manual"]),
+       new_ptype=st.sampled_from(["row", "col", "block", "manual"]),
+       nproc=st.integers(min_value=2, max_value=6),
+       n_dead=st.integers(min_value=0, max_value=3),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_restore_repartition_preserves_values(old_ptype, new_ptype,
+                                              nproc, n_dead, seed):
+    from repro.ft.faults import shrink_partition
+    n_dead = min(n_dead, nproc - 1)
+    rng = np.random.default_rng(seed)
+    shape = (12, 12)
+    data = rng.standard_normal(shape).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(nproc)
+        arr = rt.create("a", shape)
+        p_old = _make_partition(rt, old_ptype, shape, rng)
+        rt.write(arr, data, p_old)
+        cm = CheckpointManager(d)
+        cm.save_runtime(0, rt)
+        dead = sorted(rng.choice(nproc, size=n_dead, replace=False).tolist())
+        live = [p for p in range(nproc) if p not in dead]
+        for r in dead:
+            arr.mark_rank_lost(r)
+            rt.executor.drop_rank(arr, r)
+        cm.restore_runtime(rt, live=live)
+        np.testing.assert_array_equal(rt.read_coherent(arr), data)
+        # repartition onto the shrink of an arbitrary NEW partition
+        p_new = shrink_partition(rt, _make_partition(rt, new_ptype, shape,
+                                                     rng), live)
+        staging = survivor_partition(rt, shape, live)
+        rt.repartition(arr, staging, p_new)
+        np.testing.assert_array_equal(rt.read_coherent(arr), data)
+        for r in dead:
+            assert arr.valid[r].is_empty()
+
+
+@given(nproc=st.integers(min_value=2, max_value=6),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_restore_gate_rejects_uncovered(nproc, seed):
+    rng = np.random.default_rng(seed)
+    shape = (12, 12)
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(nproc)
+        arr = rt.create("a", shape)
+        pd = rt.partition_row(shape)
+        rt.write(arr, rng.standard_normal(shape).astype(np.float32), pd)
+        cm = CheckpointManager(d)
+        cm.save_runtime(0, rt)
+        before = [arr.valid[p] for p in range(nproc)]
+        # an interior-only partition leaves the boundary uncovered
+        holey = rt.partition_row(shape, region=Box.make((1, 11), (1, 11)))
+        with pytest.raises(ValueError, match="uncovered"):
+            cm.restore_runtime(rt, parts={"a": holey})
+        # the gate fired BEFORE any state was touched
+        assert [arr.valid[p] for p in range(nproc)] == before

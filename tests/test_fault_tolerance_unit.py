@@ -1,0 +1,347 @@
+"""Unit tests for the fault-tolerance building blocks.
+
+StragglerMonitor EWMA behavior (threshold crossings, alpha edge
+cases), the deterministic FaultInjector (sites, kinds, repetition),
+StepGuard retry/backoff, the shrink/inherit/survivor partition
+algebra, and the CheckpointManager runtime save/restore gates —
+everything below the run_pipeline recovery loop, which
+tests/test_fault_recovery.py exercises end to end.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core import HDArrayRuntime
+from repro.core.sections import Box, SectionSet
+from repro.ft.faults import (FaultInjector, FaultSpec, RankLostFault,
+                             StepGuard, StragglerMonitor, TransientFault,
+                             coverage_box, inherit_partition,
+                             shrink_partition, survivor_partition)
+
+
+# ---------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------
+def test_straggler_threshold_crossing():
+    m = StragglerMonitor(threshold=2.0, alpha=0.1, warmup=3)
+    for i in range(6):
+        assert not m.observe(i, 1.0)
+    assert m.observe(6, 2.5)          # 2.5 > 2.0 * 1.0
+    assert len(m.events) == 1
+    assert m.events[0].step == 6 and m.events[0].duration == 2.5
+    # the straggler did not poison the average
+    assert abs(m.ewma - 1.0) < 1e-9
+    assert not m.observe(7, 1.1)
+
+
+def test_straggler_warmup_suppresses_early_flags():
+    m = StragglerMonitor(threshold=2.0, warmup=5)
+    assert not m.observe(0, 1.0)      # seeds the EWMA
+    for i in range(1, 5):             # _n <= warmup: never flagged
+        assert not m.observe(i, 100.0)
+    # warmup passed AND the huge early samples inflated the average,
+    # so a merely-slow step is no longer an outlier
+    assert m.ewma > 1.0
+
+
+def test_straggler_alpha_zero_freezes_ewma():
+    # alpha=0: the average never moves off the first sample
+    m = StragglerMonitor(threshold=2.0, alpha=0.0, warmup=0)
+    m.observe(0, 1.0)
+    for i in range(1, 4):
+        m.observe(i, 1.9)             # below threshold, would drift
+    assert m.ewma == 1.0
+    assert m.observe(4, 2.1)
+
+
+def test_straggler_alpha_one_tracks_last_sample():
+    # alpha=1: the average IS the last non-straggler duration
+    m = StragglerMonitor(threshold=2.0, alpha=1.0, warmup=0)
+    m.observe(0, 1.0)
+    m.observe(1, 5.0)                 # 5 > 2*1: straggler, ewma stays 1
+    assert m.ewma == 1.0
+    m.observe(2, 1.5)                 # 1.5 <= 2: ewma jumps to 1.5
+    assert m.ewma == 1.5
+
+
+# ---------------------------------------------------------------------
+# FaultInjector
+# ---------------------------------------------------------------------
+def test_injector_bare_ints_fire_once():
+    inj = FaultInjector([2, 5])
+    inj.maybe_fail(0)
+    with pytest.raises(TransientFault):
+        inj.maybe_fail(2)
+    inj.maybe_fail(2)                 # fired already: silent on replay
+    with pytest.raises(TransientFault):
+        inj.maybe_fail(5)
+    assert inj.fired == {2, 5}
+    assert inj.fail_at == {2, 5}
+    assert inj.log == [(2, "step", "transient"), (5, "step", "transient")]
+
+
+def test_injector_is_deterministic():
+    def drive(inj):
+        log = []
+        for i in range(6):
+            for site in ("step", "commit"):
+                try:
+                    inj.maybe_fail(i, site=site)
+                except (TransientFault, RankLostFault):
+                    pass
+        return list(inj.log)
+
+    specs = [FaultSpec(1), FaultSpec(3, site="commit"),
+             FaultSpec(4, kind="rank", rank=2)]
+    assert drive(FaultInjector(specs)) == drive(FaultInjector(specs))
+
+
+def test_injector_site_filtering():
+    inj = FaultInjector([FaultSpec(3, site="commit")])
+    inj.maybe_fail(3, site="step")    # wrong site: no fire
+    with pytest.raises(TransientFault):
+        inj.maybe_fail(3, site="commit")
+
+
+def test_injector_times_and_rank_kind():
+    inj = FaultInjector([FaultSpec(1, times=2),
+                         FaultSpec(2, kind="rank", rank=3)])
+    for _ in range(2):
+        with pytest.raises(TransientFault):
+            inj.maybe_fail(1)
+    inj.maybe_fail(1)                 # times exhausted
+    with pytest.raises(RankLostFault) as ei:
+        inj.maybe_fail(2)
+    assert ei.value.rank == 3
+    # RankLostFault is deliberately NOT a TransientFault: retry cannot
+    # resurrect a dead rank, so StepGuard must not swallow it
+    assert not isinstance(ei.value, TransientFault)
+
+
+# ---------------------------------------------------------------------
+# StepGuard
+# ---------------------------------------------------------------------
+def test_stepguard_exponential_backoff_and_reset():
+    sleeps = []
+    restores = []
+
+    def restore_fn():
+        restores.append(True)
+        return 0, "state"
+
+    guard = StepGuard(restore_fn, max_retries=5, backoff=0.1,
+                      sleep=sleeps.append)
+    fail = [True, True, True, False]
+
+    def step():
+        if fail.pop(0):
+            raise TransientFault("boom")
+        return "ok"
+
+    for _ in range(3):
+        out, replay = guard.run(7, step)
+        assert out is None and replay == (0, "state")
+    out, replay = guard.run(7, step)
+    assert out == "ok" and replay is None
+    assert sleeps == pytest.approx([0.1, 0.2, 0.4])
+    assert guard.retries == 0          # success resets the streak
+    assert guard.recoveries == [7, 7, 7]
+    assert len(restores) == 3
+
+
+def test_stepguard_exhausts_retries():
+    guard = StepGuard(lambda: (0, None), max_retries=2, sleep=lambda _s: None)
+
+    def always_fail():
+        raise TransientFault("boom")
+
+    for _ in range(2):
+        guard.run(0, always_fail)
+    with pytest.raises(TransientFault):
+        guard.run(0, always_fail)
+
+
+def test_stepguard_does_not_catch_rank_loss():
+    guard = StepGuard(lambda: (0, None))
+
+    def lose_rank():
+        raise RankLostFault(1)
+
+    with pytest.raises(RankLostFault):
+        guard.run(0, lose_rank)
+
+
+# ---------------------------------------------------------------------
+# partition algebra of a mesh shrink
+# ---------------------------------------------------------------------
+def test_shrink_partition_redistributes_evenly():
+    rt = HDArrayRuntime(4, backend="null")
+    pid = rt.partition_row((16, 8))
+    new = shrink_partition(rt, pid, live=[0, 1, 3])
+    part = rt.parts[new]
+    assert part.regions[2].is_empty()
+    assert [r.bounds[0] for r in part.regions if not r.is_empty()] \
+        == [(0, 6), (6, 11), (11, 16)]
+    # coverage is preserved exactly
+    u = SectionSet.empty(2)
+    for r in part.regions:
+        if not r.is_empty():
+            u = u.union(SectionSet.of(r))
+    assert u == SectionSet.full((16, 8))
+
+
+def test_shrink_partition_of_interior_work_region():
+    rt = HDArrayRuntime(4, backend="null")
+    pid = rt.partition_row((16, 16), region=Box.make((1, 15), (1, 15)))
+    new = shrink_partition(rt, pid, live=[1, 2])
+    part = rt.parts[new]
+    assert part.regions[0].is_empty() and part.regions[3].is_empty()
+    assert part.regions[1].bounds == ((1, 8), (1, 15))
+    assert part.regions[2].bounds == ((8, 15), (1, 15))
+
+
+def test_shrink_partition_rejects_non_box_coverage():
+    rt = HDArrayRuntime(2, backend="null")
+    # two regions whose union is L-shaped: no box tiles it
+    pid = rt.partition_manual((8, 8), [Box.make((0, 4), (0, 8)),
+                                       Box.make((4, 8), (0, 4))])
+    with pytest.raises(ValueError, match="does not tile a box"):
+        shrink_partition(rt, pid, live=[0])
+
+
+def test_coverage_box_requires_regions():
+    with pytest.raises(ValueError, match="no non-empty regions"):
+        coverage_box([Box(((0, 0), (0, 0)))])
+
+
+def test_inherit_partition_absorbs_dead_region():
+    rt = HDArrayRuntime(4, backend="null")
+    pid = rt.partition_row((16, 8))
+    new = inherit_partition(rt, pid, live=[0, 1, 3])
+    part = rt.parts[new]
+    # rank 2's rows merge into a neighbor; survivors keep their own
+    assert part.regions[2].is_empty()
+    assert part.regions[0].bounds[0] == (0, 4)
+    merged = {part.regions[1].bounds[0], part.regions[3].bounds[0]}
+    assert merged == {(4, 12), (12, 16)} or merged == {(4, 8), (8, 16)}
+
+
+def test_inherit_partition_returns_none_when_unmergeable():
+    rt = HDArrayRuntime(2, backend="null")
+    # the dead region is not box-mergeable with the sole survivor
+    pid = rt.partition_manual((12, 12), [Box.make((0, 4), (0, 4)),
+                                         Box.make((8, 12), (8, 12))])
+    assert inherit_partition(rt, pid, live=[0]) is None
+
+
+def test_survivor_partition_covers_domain():
+    rt = HDArrayRuntime(5, backend="null")
+    pid = survivor_partition(rt, (13, 7), live=[1, 4])
+    part = rt.parts[pid]
+    assert [p for p, r in enumerate(part.regions) if not r.is_empty()] \
+        == [1, 4]
+    assert part.regions[1].bounds == ((0, 7), (0, 7))
+    assert part.regions[4].bounds == ((7, 13), (0, 7))
+
+
+# ---------------------------------------------------------------------
+# CheckpointManager runtime path
+# ---------------------------------------------------------------------
+def test_save_restore_runtime_roundtrip_sim():
+    rng = np.random.default_rng(3)
+    data = {"x": rng.standard_normal((8, 8)).astype(np.float32),
+            "y": rng.standard_normal((8, 8)).astype(np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(3)
+        pd = rt.partition_row((8, 8))
+        for name, v in data.items():
+            rt.write(rt.create(name, (8, 8)), v, pd)
+        cm = CheckpointManager(d)
+        cm.save_runtime(7, rt)
+        # clobber everything, then restore
+        for name in data:
+            rt.write(rt.arrays[name], np.zeros((8, 8), np.float32), pd)
+        step = cm.restore_runtime(rt)
+        assert step == 7
+        for name, v in data.items():
+            np.testing.assert_array_equal(rt.read_coherent(rt.arrays[name]),
+                                          v)
+        assert rt.planner.stats.checkpoint_restores == 2
+        restores = [e for e in rt.comm_log if e[0].startswith("__restore_")]
+        assert {e[0] for e in restores} == {"__restore_x", "__restore_y"}
+
+
+def test_save_runtime_async_then_restore():
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(2)
+        arr = rt.create("a", (6, 6))
+        pd = rt.partition_row((6, 6))
+        v = np.arange(36, dtype=np.float32).reshape(6, 6)
+        rt.write(arr, v, pd)
+        cm = CheckpointManager(d)
+        cm.save_runtime(1, rt, blocking=False)
+        cm.wait()
+        rt.write(arr, np.zeros((6, 6), np.float32), pd)
+        assert cm.restore_runtime(rt) == 1
+        np.testing.assert_array_equal(rt.read_coherent(arr), v)
+
+
+def test_save_runtime_rejects_incoherent_array():
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(2)
+        rt.create("a", (4, 4))         # never written: no coherent cover
+        with pytest.raises(ValueError, match="coherent cover"):
+            CheckpointManager(d).save_runtime(0, rt)
+
+
+def test_restore_runtime_busts_plan_cache():
+    """A restore rewrites coherence state, so a plan cached before the
+    fault must NOT be replayed verbatim after it."""
+    from repro.core import AccessSpec
+    ident = AccessSpec.of((0, 0))
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(2)
+        arr = rt.create("a", (8, 8))
+        pd = rt.partition_row((8, 8))
+        pc = rt.partition_col((8, 8))
+        rt.write(arr, np.ones((8, 8), np.float32), pd)
+        cm = CheckpointManager(d)
+        cm.save_runtime(0, rt)
+        # a repeated col-partition read plans once, then caches
+        for _ in range(3):
+            rt.plan_only("k", pc, [arr], {"a": ident}, {"a": ident})
+        cached_before = rt.planner.stats.plans_cached
+        assert cached_before > 0
+        cm.restore_runtime(rt)
+        plan = rt.plan_only("k", pc, [arr], {"a": ident}, {"a": ident})
+        assert not plan.cached
+        np.testing.assert_array_equal(rt.read_coherent(arr),
+                                      np.ones((8, 8), np.float32))
+
+
+def test_drop_rank_poisons_sim_buffer():
+    rt = HDArrayRuntime(2)
+    arr = rt.create("a", (4, 4))
+    pd = rt.partition_row((4, 4))
+    rt.write(arr, np.ones((4, 4), np.float32), pd)
+    rt.executor.drop_rank(arr, 1)
+    assert np.isnan(rt.executor.buffers["a"][1]).all()
+    assert np.all(rt.executor.buffers["a"][0][0:2] == 1.0)
+
+
+def test_mark_rank_lost_clears_coherence_state():
+    rt = HDArrayRuntime(3)
+    arr = rt.create("a", (9, 9))
+    pd = rt.partition_row((9, 9))
+    rt.write(arr, np.ones((9, 9), np.float32), pd)
+    arr.mark_rank_lost(1)
+    assert arr.valid[1].is_empty()
+    assert not arr.coherent_cover()    # rows 3..6 lost until restore
+    for q in range(3):
+        if q != 1:
+            assert arr.sgdef[q][1].is_empty()   # pending sends to dead
+            assert not arr.valid[q].is_empty()  # survivors keep theirs
