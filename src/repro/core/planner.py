@@ -114,6 +114,14 @@ class PlannerStats:
     candidate_pairs: int = 0    # neighbor-index survivors actually visited
     pairs_pruned: int = 0       # all-pairs count minus survivors
     commit_replays: int = 0     # fixpoint commits replayed as O(P) restores
+    # one-program step counters (fused execute_step + scan capture)
+    fused_steps: int = 0         # steps run as ONE exchange+kernel program
+    scan_captures: int = 0       # steady-state cycles captured as lax.scan
+    # executor dispatches the LAST step cost the host: 1 for a fused
+    # execute_step, 2 under the §4.2 overlap schedule (messages ∥
+    # commit, then kernel), 0 for a step executed inside a captured
+    # scan (its one-off launch is accounted in scan_captures)
+    python_dispatches_per_step: float = 1.0
     # fault-tolerance counters (run_pipeline recovery path)
     recoveries: int = 0          # fault -> restore -> resume cycles
     checkpoint_restores: int = 0  # per-array planned restore writes
@@ -129,6 +137,8 @@ class PlannerStats:
         self.plans_computed = self.hits_history = self.hits_state_compare = 0
         self.intersect_ops = self.gdef_updates = self.state_compares = 0
         self.candidate_pairs = self.pairs_pruned = self.commit_replays = 0
+        self.fused_steps = self.scan_captures = 0
+        self.python_dispatches_per_step = 1.0
         self.recoveries = self.checkpoint_restores = 0
         self.elastic_shrinks = self.straggler_events = self.steps_replayed = 0
 

@@ -167,18 +167,28 @@ class HDArrayRuntime:
                 _fault_hook("commit")
             self.planner.commit(plan, arrays, part)
 
+        stats = self.planner.stats
         if self._scheduler is not None:
             self._scheduler.step(
                 plan, part, kernel, arrays, self.arrays, uses, defs, kw,
                 commit=_commit)
+            # messages ∥ commit, then the kernel: two host dispatches
+            stats.python_dispatches_per_step = 2.0
         else:
-            # one call for the whole plan: collective backends fuse all
-            # arrays' messages into a single jitted dispatch
-            self.executor.execute_plan(plan, self.arrays)
-            if kernel is not None:
-                self.executor.run_kernel(kernel, part.regions, arrays,
-                                         defs=tuple(defs), **kw)
+            # ONE runtime->executor call for the whole step: a fusing
+            # backend traces exchange + kernel into a single device
+            # program (True); the default runs the classic two-phase
+            # path (False)
+            fused = self.executor.execute_step(
+                plan, self.arrays, kernel, part.regions, arrays,
+                uses=uses, defs=defs, kw=kw)
             _commit()
+            if fused:
+                stats.fused_steps += 1
+                stats.python_dispatches_per_step = 1.0
+            else:
+                stats.python_dispatches_per_step = \
+                    2.0 if kernel is not None else 1.0
         self.log_plan(kernel_name, plan)
         return plan
 
@@ -200,16 +210,127 @@ class HDArrayRuntime:
         chaos suite gates on it.  Recovery mode steps serially (per-
         step §4.2 overlap still applies when ``overlap=True``; the
         cross-step plan-ahead of the fault-free path would speculate
-        past a checkpoint boundary)."""
+        past a checkpoint boundary).
+
+        Without overlap, the serial path watches for a *steady-state
+        cycle*: a repeating step sequence whose every step replayed
+        both its plan (§4.2 cache hit) and its commit (fingerprint
+        replay) for two consecutive periods.  Such a cycle is provably
+        periodic, so the remaining repetitions are offered to the
+        executor as ONE captured program
+        (``Executor.capture_cycle`` — the jax backend compiles a
+        jitted ``lax.scan``); the planner then fast-replays each
+        covered step's metadata so ``comm_log`` and the GDEF state
+        evolve exactly as the unfused schedule.  Host backends decline
+        and nothing changes."""
         if recovery is not None:
             return self._run_pipeline_recoverable(list(steps), recovery)
         if self._scheduler is None:
-            return [self.apply_kernel(
-                        st["kernel_name"], st["part_id"], st["kernel"],
-                        st["arrays"], st["uses"], st["defs"],
-                        **st.get("kw", {}))
-                    for st in steps]
+            return self._run_pipeline_serial(list(steps))
         return self._scheduler.pipeline(self, list(steps))
+
+    # -- steady-state capture (one dispatch for K steps) -----------------
+    #: longest cycle period the serial pipeline looks for
+    _MAX_CYCLE_PERIOD = 4
+
+    def _run_pipeline_serial(self, steps: list) -> list:
+        stats = self.planner.stats
+        n = len(steps)
+        plans: list = [None] * n
+        steady = [False] * n
+        try_capture = True
+        i = 0
+        while i < n:
+            if try_capture:
+                d = self._cycle_period(steps, steady, i)
+                if d:
+                    # only the upcoming steps that literally repeat the
+                    # detected cycle are capturable
+                    match = 0
+                    while (i + match < n and self._steps_equal(
+                            steps[i + match], steps[i - d + match % d])):
+                        match += 1
+                    reps = match // d
+                    if reps >= 1:
+                        cycle = [dict(
+                            plan=plans[i - d + j],
+                            kernel=steps[i - d + j]["kernel"],
+                            regions=self.parts[
+                                steps[i - d + j]["part_id"]].regions,
+                            arrays=steps[i - d + j]["arrays"],
+                            uses=steps[i - d + j]["uses"],
+                            defs=steps[i - d + j]["defs"],
+                            kw=steps[i - d + j].get("kw", {}),
+                        ) for j in range(d)]
+                        runner = self.executor.capture_cycle(cycle, reps)
+                        if runner is None:
+                            try_capture = False
+                        else:
+                            runner()          # reps*d steps, ONE dispatch
+                            stats.scan_captures += 1
+                            for k in range(reps * d):
+                                plans[i + k] = self._replay_step_metadata(
+                                    steps[i + k])
+                                steady[i + k] = True
+                            stats.python_dispatches_per_step = 0.0
+                            i += reps * d
+                            continue
+            before = stats.commit_replays
+            st = steps[i]
+            plans[i] = self.apply_kernel(
+                st["kernel_name"], st["part_id"], st["kernel"],
+                st["arrays"], st["uses"], st["defs"], **st.get("kw", {}))
+            # steady := the §4.2 machinery replayed BOTH the plan and
+            # the commit — the step touched no set algebra at all
+            steady[i] = (plans[i].cached and stats.commit_replays - before
+                         == len(plans[i].arrays))
+            i += 1
+        return plans
+
+    def _cycle_period(self, steps: list, steady: list, i: int) -> int:
+        """Smallest period d such that the last 2d steps were all steady
+        and the two periods are the same step sequence — the witness
+        that makes scan capture sound (see capture_cycle in base.py)."""
+        for d in range(1, min(self._MAX_CYCLE_PERIOD, i // 2) + 1):
+            if (all(steady[i - k] for k in range(1, 2 * d + 1))
+                    and all(self._steps_equal(steps[i - 2 * d + j],
+                                              steps[i - d + j])
+                            for j in range(d))):
+                return d
+        return 0
+
+    @staticmethod
+    def _steps_equal(a: Dict, b: Dict) -> bool:
+        return (a["kernel_name"] == b["kernel_name"]
+                and a["part_id"] == b["part_id"]
+                and a["kernel"] is b["kernel"]
+                and len(a["arrays"]) == len(b["arrays"])
+                and all(x is y for x, y in zip(a["arrays"], b["arrays"]))
+                and a["uses"] == b["uses"] and a["defs"] == b["defs"]
+                and a.get("kw", {}) == b.get("kw", {}))
+
+    def _replay_step_metadata(self, st: Dict) -> CommPlan:
+        """Advance the planner state for a step whose DATA movement ran
+        inside a captured program.  The periodicity witness guarantees
+        both replays hit; the RuntimeErrors are tripwires, not paths."""
+        part = self.parts[st["part_id"]]
+        arrays = st["arrays"]
+        stats = self.planner.stats
+        before = stats.commit_replays
+        plan = self.planner.plan(st["kernel_name"], part, arrays,
+                                 st["uses"], st["defs"])
+        if not plan.cached:
+            raise RuntimeError(
+                f"captured step {st['kernel_name']!r} fell out of the "
+                f"§4.2 plan cache — the steady-state witness was wrong")
+        self.planner.commit(plan, arrays, part)
+        if stats.commit_replays - before != len(plan.arrays):
+            raise RuntimeError(
+                f"captured step {st['kernel_name']!r} commit was not a "
+                f"fingerprint replay — the steady-state witness was "
+                f"wrong")
+        self.log_plan(st["kernel_name"], plan)
+        return plan
 
     # -- fault-tolerant pipeline (docs/fault-tolerance.md) ---------------
     def _run_pipeline_recoverable(self, steps: list, policy) -> list:

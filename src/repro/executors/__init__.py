@@ -32,10 +32,10 @@ from .sim import SimExecutor
 from .null import NullExecutor
 from .jax_exec import JaxExecutor
 from .kernels import device_kernel, kernel_put
-from .overlap import OverlapScheduler
+from .overlap import OverlapScheduler, halo_split
 
 __all__ = [
     "Executor", "available_backends", "make_executor", "register_executor",
     "SimExecutor", "NullExecutor", "JaxExecutor", "OverlapScheduler",
-    "device_kernel", "kernel_put",
+    "device_kernel", "kernel_put", "halo_split",
 ]

@@ -16,6 +16,22 @@ the four runtime actions the paper's library issues (§5):
   The runtime calls this (not per-array ``execute_messages``) so a
   backend may fuse the whole plan into one dispatch; the default
   implementation is the per-array loop,
+* ``execute_step`` — run one WHOLE apply_kernel step (the plan's data
+  movement AND the kernel).  The serial runtime path calls this; the
+  default implementation is ``execute_plan`` followed by
+  ``run_kernel`` and returns False.  A backend that fuses the
+  exchange and the compute into one device program (the resident jax
+  backend, for ``device_kernel``-marked kernels) returns True, which
+  the runtime counts as ``PlannerStats.fused_steps``,
+* ``capture_cycle`` — offer a steady-state pipeline cycle (a repeating
+  sequence of verified-fixpoint steps) for whole-program capture.
+  Returns a zero-argument runner that executes ``reps`` repetitions of
+  the cycle as ONE dispatch (the jax backend compiles a jitted
+  ``lax.scan`` with donated carries), or None when the backend cannot
+  capture (the host backends: they gain nothing from it).  The runtime
+  only calls this with cycles whose every step replayed both its plan
+  (§4.2 cache hit) and its commit (fingerprint-verified) for two full
+  periods, so the captured program is provably the steady state,
 * ``sync_host`` / ``sync_device`` — the residency hooks: make the host
   mirrors (resp. the device-resident copy) of an array coherent.
   No-ops on host-memory backends; on the resident jax backend every
@@ -97,6 +113,18 @@ class Executor(Protocol):
 
     def execute_plan(self, plan: "CommPlan",
                      arrays_by_name: Dict[str, "HDArray"]) -> None: ...
+
+    def execute_step(self, plan: "CommPlan",
+                     arrays_by_name: Dict[str, "HDArray"],
+                     kernel: Optional[Callable],
+                     part_regions: Sequence["Box"],
+                     arrays: Sequence["HDArray"],
+                     uses: Optional[Dict] = None,
+                     defs: Optional[Dict] = None,
+                     kw: Optional[Dict] = None) -> bool: ...
+
+    def capture_cycle(self, cycle: Sequence[Dict],
+                      reps: int) -> Optional[Callable[[], None]]: ...
 
     def sync_host(self, arr: "HDArray") -> None: ...
 

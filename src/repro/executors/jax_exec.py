@@ -57,6 +57,27 @@ the resident stacked arrays, so a ``run_pipeline`` of Jacobi/GEMM
 steps never leaves the device.  Unmarked (in-place numpy) kernels fall
 back to the host mirrors, exactly the Sim semantics.
 
+**One-program steps.**  ``execute_step`` goes one step further: the
+plan's exchange AND the device kernel are traced into a SINGLE jitted
+shard_map program per step signature.  When the plan admits the exact
+interior/boundary work split
+(:func:`~repro.executors.overlap.halo_split`), the interior kernel
+sweep is ordered before the ppermute payloads land — it has no data
+dependency on them, so XLA overlaps ghost-cell exchange with interior
+compute inside the one program (the device-level analogue of the host
+overlap scheduler, bit-identical to it by the same exactness
+argument).  The runtime counts these as ``PlannerStats.fused_steps``.
+
+**Captured pipelines.**  ``capture_cycle`` compiles a verified
+steady-state cycle (every step's plan a §4.2 cache hit and its commit
+a fingerprint replay for two full periods) into ONE jitted
+``lax.scan`` over ``reps`` repetitions with donated carries: K more
+steps of the pipeline become one dispatch, and the per-step host
+dispatch count (``PlannerStats.python_dispatches_per_step``) drops to
+zero.  The scan body chains the same step tracers the fused step
+programs use, so the result stays bit-identical to the unfused
+oracle.
+
 ``HDArrayReduce`` keeps the oracle split: the local fold runs on the
 host mirrors (one d2h sync when the device copy is newer) and the
 global combine is a REAL collective — ``lax.psum`` / ``pmax`` /
@@ -163,6 +184,12 @@ class JaxExecutor(SimExecutor):
         self._sharding = None
         # structure signature -> (jitted program, counts delta)
         self._programs: Dict[tuple, Tuple[Callable, Dict[str, int]]] = {}
+        # step signature -> halo_split result (pure section algebra
+        # over a steady plan — identical every hit, costly to redo)
+        self._splits: Dict[tuple, Any] = {}
+        # (fn, input avals, meta) of the most recent fused step / scan
+        # program — the roofline report hook (last_program_lowered)
+        self._last_program: Optional[tuple] = None
         # name -> resident (nproc, *shape) sharded array + dirty flags
         self._device: Dict[str, Any] = {}
         self._device_ok: Dict[str, bool] = {}
@@ -279,9 +306,12 @@ class JaxExecutor(SimExecutor):
         else:
             self._execute_legacy(arr, msgs, kind)
 
-    def execute_plan(self, plan: "CommPlan",
-                     arrays_by_name: Dict[str, "HDArray"]) -> None:
-        """One fused jitted dispatch for ALL arrays with traffic."""
+    @staticmethod
+    def _plan_groups(plan: "CommPlan",
+                     arrays_by_name: Dict[str, "HDArray"]
+                     ) -> List[Tuple["HDArray", List[Msg], Any]]:
+        """Flatten a CommPlan into per-array (array, messages, kind)
+        groups — the unit every fused program is lowered from."""
         groups: List[Tuple["HDArray", List[Msg], Any]] = []
         for ap in plan.arrays:
             if not ap.messages:
@@ -292,6 +322,12 @@ class JaxExecutor(SimExecutor):
                     for box in secs]
             if msgs:
                 groups.append((arr, msgs, ap.kind))
+        return groups
+
+    def execute_plan(self, plan: "CommPlan",
+                     arrays_by_name: Dict[str, "HDArray"]) -> None:
+        """One fused jitted dispatch for ALL arrays with traffic."""
+        groups = self._plan_groups(plan, arrays_by_name)
         if not groups:
             return
         if self.resident:
@@ -394,27 +430,9 @@ class JaxExecutor(SimExecutor):
         from jax.sharding import PartitionSpec as P
 
         from repro import compat
-        from repro.core.planner import CommKind as CK
 
         axis = self.axis
-        counts = {"all_gather": 0, "all_to_all": 0, "ppermute": 0}
-        per_group: List[List[Tuple[Callable, Callable]]] = []
-        for arr, msgs, kind in groups:
-            steps: List[Tuple[Callable, Callable]] = []
-            if kind == CK.ALL_GATHER and self._gather_structure(msgs, arr.nproc):
-                steps.append(self._lower_all_gather(arr, msgs))
-                counts["all_gather"] += 1
-            elif kind == CK.ALL_TO_ALL and self._a2a_structure(msgs, arr.nproc):
-                steps.append(self._lower_all_to_all(arr, msgs))
-                counts["all_to_all"] += 1
-            else:
-                # HALO lands here naturally: its two directional sweeps
-                # are the two shift buckets, one ppermute per direction.
-                for rnd in _decompose_rounds(msgs, arr.nproc):
-                    steps.append(self._lower_ppermute_round(arr, rnd))
-                    counts["ppermute"] += 1
-            per_group.append(steps)
-
+        per_group, counts = self._lower_groups(groups)
         n_coll = sum(len(s) for s in per_group)
         if n_coll > 1 and jax.default_backend() == "cpu":
             stages = []
@@ -452,6 +470,31 @@ class JaxExecutor(SimExecutor):
             out_specs=tuple(P(axis) for _ in range(k)),
             check_vma=False), donate_argnums=self._donate(k))
         return [(None, fn)], counts
+
+    def _lower_groups(self, groups):
+        """Lower each (array, msgs, kind) group to its (collect, apply)
+        closure pairs — shared by the plan, fused-step and captured-scan
+        program builders.  Returns ``(per_group, counts)``."""
+        from repro.core.planner import CommKind as CK
+
+        counts = {"all_gather": 0, "all_to_all": 0, "ppermute": 0}
+        per_group: List[List[Tuple[Callable, Callable]]] = []
+        for arr, msgs, kind in groups:
+            steps: List[Tuple[Callable, Callable]] = []
+            if kind == CK.ALL_GATHER and self._gather_structure(msgs, arr.nproc):
+                steps.append(self._lower_all_gather(arr, msgs))
+                counts["all_gather"] += 1
+            elif kind == CK.ALL_TO_ALL and self._a2a_structure(msgs, arr.nproc):
+                steps.append(self._lower_all_to_all(arr, msgs))
+                counts["all_to_all"] += 1
+            else:
+                # HALO lands here naturally: its two directional sweeps
+                # are the two shift buckets, one ppermute per direction.
+                for rnd in _decompose_rounds(msgs, arr.nproc):
+                    steps.append(self._lower_ppermute_round(arr, rnd))
+                    counts["ppermute"] += 1
+            per_group.append(steps)
+        return per_group, counts
 
     # -- structure checks ----------------------------------------------
     @staticmethod
@@ -647,6 +690,8 @@ class JaxExecutor(SimExecutor):
                     self._device_ok[a.name] = False
 
     def _run_kernel_device(self, kernel, part_regions, arrays, **kw) -> None:
+        import jax
+
         with self._lock:
             self._ensure_mesh(arrays[0].nproc)
             for a in arrays:
@@ -656,22 +701,32 @@ class JaxExecutor(SimExecutor):
                 hash((kernel, kw_key))
             except TypeError:
                 kw_key = None      # unhashable kw: trace fresh each call
-            key = ("kernel", kernel, kw_key,
+            pershard = jax.default_backend() == "cpu"
+            key = ("kernelps" if pershard else "kernel", kernel, kw_key,
                    tuple(r.bounds for r in part_regions),
                    tuple((a.name, a.shape, a.dtype.str) for a in arrays))
             prog = self._programs.get(key) if kw_key is not None else None
             if prog is None:
-                prog = self._build_kernel_program(kernel, part_regions,
-                                                  arrays, kw)
+                prog = (self._build_pershard_kernel(kernel, part_regions,
+                                                    arrays, kw)
+                        if pershard else
+                        self._build_kernel_program(kernel, part_regions,
+                                                   arrays, kw))
                 if kw_key is not None:
                     self._programs[key] = prog
-            fn, out_names = prog
-            if not out_names:
-                return                    # kernel defines nothing
-            outs = fn(*[self._device[a.name] for a in arrays])
-            for name, out in zip(out_names, outs):
-                self._device[name] = out
-                self._host_ok[name] = False
+            if pershard:
+                _tag, rank_fns, out_names = prog
+                if not out_names:
+                    return
+                self._dispatch_pershard(rank_fns, out_names, arrays)
+            else:
+                fn, out_names = prog
+                if not out_names:
+                    return                # kernel defines nothing
+                outs = fn(*[self._device[a.name] for a in arrays])
+                for name, out in zip(out_names, outs):
+                    self._device[name] = out
+                    self._host_ok[name] = False
             self.device_kernel_launches += 1
 
     def _build_kernel_program(self, kernel, part_regions, arrays, kw):
@@ -700,15 +755,7 @@ class JaxExecutor(SimExecutor):
         nproc = arrays[0].nproc
         assert len(regions) == nproc, (len(regions), nproc)
 
-        slabs = {a.name: jax.ShapeDtypeStruct(a.shape, a.dtype)
-                 for a in arrays}
-        defined: set = set()
-        for region in regions:
-            if region.is_empty():
-                continue
-            res = jax.eval_shape(
-                lambda bufs, _r=region: kernel(_r, bufs, **kw) or {}, slabs)
-            defined.update(res.keys())
+        defined = self._kernel_defined(kernel, regions, arrays, kw)
         out_names = [n for n in names if n in defined]
         if not out_names:
             return None, out_names
@@ -737,6 +784,503 @@ class JaxExecutor(SimExecutor):
             out_specs=tuple(P(axis) for _ in out_names),
             check_vma=False), donate_argnums=donate)
         return fn, out_names
+
+    def _build_pershard_kernel(self, kernel, part_regions, arrays, kw):
+        """Per-device jitted kernel calls instead of the one-program
+        ``lax.switch`` sweep — the XLA cpu fast path for kernel-only
+        dispatch.  The outputs of a ``lax.switch`` cannot alias its
+        donated inputs through the branch boundary, so the one-program
+        sweep pays a full-buffer copy per defined array per device on
+        every step; a per-shard jit keeps the kernel's dynamic-update-
+        slice in place on the donated shard (~8x on the n=1024 Jacobi
+        band sweep).  Shards are read zero-copy
+        (``addressable_shards``) and reassembled with
+        ``make_array_from_single_device_arrays``, so the step still
+        never crosses the host boundary; each rank's trace is the same
+        closure a switch branch would run, on its own pre-kernel slabs.
+        """
+        import jax
+
+        names = [a.name for a in arrays]
+        regions = list(part_regions)
+        defined = self._kernel_defined(kernel, regions, arrays, kw)
+        out_names = [n for n in names if n in defined]
+        if not out_names:
+            return ("pershard", [], out_names)
+        donate = tuple(i for i, n in enumerate(names) if n in defined)
+
+        def make_fn(region):
+            def body(*ops):
+                # ops are (1, *shape) shard views; kernel sees slabs
+                bufs = {n: o[0] for n, o in zip(names, ops)}
+                res = kernel(region, bufs, **kw) or {}
+                return tuple(res.get(n, bufs[n])[None] for n in out_names)
+            return jax.jit(body, donate_argnums=donate)
+
+        rank_fns = [None if r.is_empty() else make_fn(r) for r in regions]
+        return ("pershard", rank_fns, out_names)
+
+    def _dispatch_pershard(self, rank_fns, out_names, arrays) -> None:
+        """Run per-shard kernel fns device-by-device (dispatch is
+        async, so the devices still compute concurrently) and rebuild
+        the resident stacked arrays from the output shards.  Caller
+        holds the lock and has synced arrays to device."""
+        import jax
+
+        names = [a.name for a in arrays]
+        nproc = arrays[0].nproc
+        shards: Dict[str, list] = {}
+        for a in arrays:
+            per = [None] * nproc
+            for s in self._device[a.name].addressable_shards:
+                per[s.index[0].start or 0] = s.data
+            shards[a.name] = per
+        # drop the stacked parents of the defined arrays so the donated
+        # shard buffers are single-referenced — otherwise the runtime
+        # declines the donation and copies (the rebuild below restores
+        # the entries before anyone can observe the gap)
+        for n in out_names:
+            del self._device[n]
+        outs = {n: list(shards[n]) for n in out_names}
+        for i, fn in enumerate(rank_fns):
+            if fn is None:
+                continue                    # empty region: pass-through
+            res = fn(*[shards[n][i] for n in names])
+            for n, o in zip(out_names, res):
+                outs[n][i] = o
+        by_name = {a.name: a for a in arrays}
+        for n in out_names:
+            shape = (nproc,) + by_name[n].shape
+            self._device[n] = jax.make_array_from_single_device_arrays(
+                shape, self._sharding, outs[n])
+            self._host_ok[n] = False
+
+    @staticmethod
+    def _kernel_defined(kernel, regions, arrays, kw) -> set:
+        """Names of the arrays the kernel defines — discovered with one
+        abstract pre-trace (``jax.eval_shape``) per non-empty region."""
+        import jax
+
+        slabs = {a.name: jax.ShapeDtypeStruct(a.shape, a.dtype)
+                 for a in arrays}
+        defined: set = set()
+        for region in regions:
+            if region.is_empty():
+                continue
+            res = jax.eval_shape(
+                lambda bufs, _r=region: kernel(_r, bufs, **kw) or {}, slabs)
+            defined.update(res.keys())
+        return defined
+
+    # -- fused steps & captured pipelines (one-program execution) -------
+    def execute_step(self, plan, arrays_by_name, kernel, part_regions,
+                     arrays, uses=None, defs=None, kw=None) -> bool:
+        """One apply_kernel step as ONE device program.
+
+        When the backend is resident and the kernel is ``device_kernel``
+        -marked, the plan's exchange and the kernel sweep are traced
+        into a single jitted shard_map program (cached per step
+        signature).  When the step's plan admits the exact halo split
+        (:func:`~repro.executors.overlap.halo_split`), the interior
+        kernel sweep is ordered BEFORE the ppermute payload applies —
+        it has no data dependency on them, so XLA overlaps ghost-cell
+        exchange with interior compute inside the one program, the
+        device-level analogue of the host overlap scheduler.  Returns
+        True iff the step ran fused (the runtime counts
+        ``PlannerStats.fused_steps``); everything else falls back to
+        the classic two-phase path and returns False.
+        """
+        kw = kw or {}
+        if (not self.resident or kernel is None
+                or not getattr(kernel, "__hdarray_device__", False)):
+            return super().execute_step(
+                plan, arrays_by_name, kernel, part_regions, arrays,
+                uses=uses, defs=defs, kw=kw)
+        groups = self._plan_groups(plan, arrays_by_name)
+        try:
+            kw_key: Any = tuple(sorted(kw.items()))
+            hash((kernel, kw_key))
+        except TypeError:
+            return super().execute_step(
+                plan, arrays_by_name, kernel, part_regions, arrays,
+                uses=uses, defs=defs, kw=kw)
+        import jax
+
+        from .overlap import halo_split
+
+        if not groups and jax.default_backend() == "cpu":
+            # no traffic (e.g. GEMM after the gather): the kernel alone
+            # is the step, and per-shard dispatch beats the one-program
+            # switch on the cpu backend (see _build_pershard_kernel)
+            self._run_kernel_device(kernel, part_regions, arrays, **kw)
+            return True
+
+        gsig = tuple((arr.name, kind,
+                      tuple((s, d, b.bounds) for s, d, b in msgs))
+                     for arr, msgs, kind in groups)
+        rsig = tuple(r.bounds for r in part_regions)
+        # a step without traffic (e.g. GEMM after the gather) still runs
+        # as ONE program — the kernel-only case of the same builder, one
+        # dispatch instead of a per-device launch loop.  The halo split
+        # is pure section algebra over the (steady, identical) plan, so
+        # memoize it per step signature — computed fresh it rivals the
+        # device time of the whole step.
+        split = None
+        if groups and uses is not None and defs is not None:
+            try:
+                skey = (gsig, rsig, tuple(sorted(uses.items())),
+                        tuple(sorted(defs.items())))
+                split = self._splits[skey]
+            except KeyError:
+                split = halo_split(plan, part_regions, uses, defs)
+                self._splits[skey] = split
+            except TypeError:               # unhashable Access values
+                split = halo_split(plan, part_regions, uses, defs)
+        with self._lock:
+            self._ensure_mesh(arrays[0].nproc)
+            for a in arrays:
+                self.sync_device(a)
+            key = ("step", kernel, kw_key, rsig,
+                   tuple((a.name, a.shape, a.dtype.str) for a in arrays),
+                   gsig, self._split_key(split))
+            prog = self._programs.get(key)
+            if prog is None:
+                prog = self._build_step_program(groups, kernel,
+                                                part_regions, arrays, kw,
+                                                split)
+                self._programs[key] = prog
+            self._dispatch_step(prog, groups, arrays)
+        return True
+
+    @staticmethod
+    def _split_key(split):
+        # the halo split is an input of the traced program, so it must
+        # be part of the cache key (bounds are hashable ints)
+        if split is None:
+            return None
+        return tuple(tuple(tuple(b.bounds for b in boxes) for boxes in half)
+                     for half in split)
+
+    def _dispatch_step(self, prog, groups, arrays) -> None:
+        """Run a built step program and account its counters (caller
+        holds the lock and has synced every array to device)."""
+        mode = prog[0]
+        if mode == "fused":
+            _m, fn, out_names, counts, launches = prog
+            outs = fn(*[self._device[a.name] for a in arrays])
+            for name, out in zip(out_names, outs):
+                self._device[name] = out
+                self._host_ok[name] = False
+        else:                                   # "staged" (cpu backend)
+            _m, stages, kprog, counts, launches = prog
+            devs = [self._device[a.name] for a in arrays]
+            names = [a.name for a in arrays]
+            for i, fn1 in stages:
+                devs[i] = fn1(devs[i])
+                self._device[names[i]] = devs[i]
+                self._host_ok[names[i]] = False
+            if kprog is not None:
+                rank_fns, k_out = kprog
+                self._dispatch_pershard(rank_fns, k_out, arrays)
+        for arr, msgs, _kind in groups:
+            itemsize = arr.itemsize
+            for _s, _d, box in msgs:
+                self.bytes_moved += box.volume() * itemsize
+                self.messages_executed += 1
+        for k, v in counts.items():
+            self.collective_counts[k] += v
+        self.device_kernel_launches += launches
+
+    def _kernel_switch(self, names, kernel, kw, out_kernel, boxes_per_rank):
+        """A per-rank ``lax.switch`` sweeping the given boxes: each
+        branch chains the kernel over its rank's boxes (device-kernel
+        convention: each call returns full updated buffers, threaded
+        into the next box's view).  Returns an ``xs -> xs`` tracer."""
+        import jax
+
+        def make_branch(boxes):
+            def branch(ops):
+                bufs = dict(zip(names, ops))
+                for box in boxes:
+                    if box.is_empty():
+                        continue
+                    res = kernel(box, bufs, **kw) or {}
+                    for n in out_kernel:
+                        if n in res:
+                            bufs[n] = res[n]
+                return tuple(bufs[n] for n in out_kernel)
+            return branch
+
+        branches = [make_branch(b) for b in boxes_per_rank]
+        out_idx = [names.index(n) for n in out_kernel]
+
+        def run(xs, idx):
+            outs = jax.lax.switch(idx, branches, tuple(xs))
+            xs = list(xs)
+            for i, o in zip(out_idx, outs):
+                xs[i] = o
+            return xs
+
+        return run
+
+    def _make_step_fn(self, names, lowered_idx, kernel, kw, out_kernel,
+                      regions, split):
+        """Trace ONE whole step over the per-rank local blocks:
+        collects on the pre-exchange state, the interior kernel sweep
+        (when the halo split applies — no data dependency on the
+        in-flight payloads, so XLA overlaps them), the payload applies,
+        then the boundary (or full-region) sweep.  Shared by the fused
+        step program and the captured-scan body.  ``lowered_idx`` maps
+        each group's (collect, apply) pairs to its index in ``names``.
+        """
+        def step_fn(xs, idx):
+            xs = list(xs)
+            payloads = [[collect(xs[gi], idx) for collect, _a in steps]
+                        for gi, steps in lowered_idx]
+            if kernel is not None and out_kernel and split is not None:
+                xs = self._kernel_switch(names, kernel, kw, out_kernel,
+                                         split[0])(xs, idx)
+            for (gi, steps), pls in zip(lowered_idx, payloads):
+                x = xs[gi]
+                for (_c, apply), pl in zip(steps, pls):
+                    x = apply(x, pl, idx)
+                xs[gi] = x
+            if kernel is not None and out_kernel:
+                boxes = (split[1] if split is not None
+                         else [(r,) for r in regions])
+                xs = self._kernel_switch(names, kernel, kw, out_kernel,
+                                         boxes)(xs, idx)
+            return xs
+
+        return step_fn
+
+    def _build_step_program(self, groups, kernel, part_regions, arrays,
+                            kw, split):
+        """Trace + jit one WHOLE step (exchange + kernel).  Cache value
+        is ``("fused", fn, out_names, counts, launches)`` or — on the
+        XLA cpu host platform when the exchange needs more than one
+        collective (the in-program rendezvous pathology, see
+        :meth:`_build_plan_program`; at n=1024 the fused two-ppermute
+        halo step measured ~10x slower than staged on XLA cpu) —
+        ``("staged", stages, kernel_fn,
+        kernel_out, counts, launches)``: one dispatch per collective
+        chained through the donated resident buffers, then the kernel
+        program.  Either way ONE executor call runs the step."""
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+
+        axis = self.axis
+        names = [a.name for a in arrays]
+        regions = list(part_regions)
+        per_group, counts = self._lower_groups(groups)
+        gidx = [names.index(arr.name) for arr, _m, _k in groups]
+        n_coll = sum(len(s) for s in per_group)
+
+        defined = self._kernel_defined(kernel, regions, arrays, kw)
+        out_kernel = [n for n in names if n in defined]
+        traffic = {arr.name for arr, _m, _k in groups}
+        out_names = [n for n in names if n in defined or n in traffic]
+        launches = 1 if out_kernel else 0
+
+        if n_coll > 1 and jax.default_backend() == "cpu":
+            stages = []
+            for gi, steps in zip(gidx, per_group):
+                for collect, apply in steps:
+                    def body1(xb, _c=collect, _a=apply):
+                        idx = jax.lax.axis_index(axis)
+                        x = xb[0]
+                        return _a(x, _c(x, idx), idx)[None]
+                    stages.append((gi, jax.jit(compat.shard_map(
+                        body1, mesh=self._mesh, in_specs=P(axis),
+                        out_specs=P(axis), check_vma=False),
+                        donate_argnums=(0,))))
+            kprog = None
+            if out_kernel:
+                _tag, rank_fns, k_out = self._build_pershard_kernel(
+                    kernel, regions, arrays, kw)
+                kprog = (rank_fns, k_out)
+            return ("staged", stages, kprog, counts, launches)
+
+        step_fn = self._make_step_fn(names, list(zip(gidx, per_group)),
+                                     kernel, kw, out_kernel, regions,
+                                     split)
+
+        def body(*xbs):
+            idx = jax.lax.axis_index(axis)
+            xs = step_fn([xb[0] for xb in xbs], idx)
+            return tuple(xs[names.index(n)][None] for n in out_names)
+
+        donate = tuple(i for i, n in enumerate(names) if n in out_names)
+        fn = jax.jit(compat.shard_map(
+            body, mesh=self._mesh,
+            in_specs=tuple(P(axis) for _ in names),
+            out_specs=tuple(P(axis) for _ in out_names),
+            check_vma=False), donate_argnums=donate)
+        self._last_program = (fn, tuple(
+            jax.ShapeDtypeStruct((a.nproc,) + a.shape, a.dtype)
+            for a in arrays), {"kind": "step", "steps": 1})
+        return ("fused", fn, out_names, counts, launches)
+
+    def capture_cycle(self, cycle, reps: int) -> Optional[Callable]:
+        """Capture a steady-state pipeline cycle as ONE jitted
+        ``lax.scan`` over ``reps`` repetitions, carries donated.
+
+        Each cycle step is a dict with keys ``plan`` / ``kernel`` /
+        ``regions`` / ``arrays`` / ``uses`` / ``defs`` / ``kw`` (see
+        ``HDArrayRuntime._run_pipeline_serial``).  The scan body chains
+        the same step tracers the fused step program uses, over the
+        union of all steps' arrays, so the captured program is
+        bit-identical to ``reps`` unfused steps — the per-step host
+        dispatch count drops to ZERO.  Returns the runner (executes the
+        scan and accounts counters) or None when any step is not
+        device-traceable.
+        """
+        if not self.resident or reps < 1 or not cycle:
+            return None
+        from .overlap import halo_split
+
+        for st in cycle:
+            k = st["kernel"]
+            if k is not None and not getattr(k, "__hdarray_device__",
+                                             False):
+                return None
+        axis = self.axis
+
+        # union of every step's arrays, first-seen order: the scan carry
+        union: List = []
+        seen = set()
+        for st in cycle:
+            for a in st["arrays"]:
+                if a.name not in seen:
+                    seen.add(a.name)
+                    union.append(a)
+        names = [a.name for a in union]
+        by_name = {a.name: a for a in union}
+
+        try:
+            step_meta = []
+            sub_keys = []
+            for st in cycle:
+                kernel = st["kernel"]
+                kw = st.get("kw") or {}
+                kw_key: Any = tuple(sorted(kw.items()))
+                hash((kernel, kw_key))
+                groups = self._plan_groups(st["plan"], by_name)
+                regions = list(st["regions"])
+                split = (halo_split(st["plan"], regions, st["uses"],
+                                    st["defs"])
+                         if kernel is not None else None)
+                step_meta.append((groups, kernel, kw, regions, split))
+                sub_keys.append(
+                    (kernel, kw_key, tuple(r.bounds for r in regions),
+                     tuple((arr.name, kind,
+                            tuple((s, d, b.bounds) for s, d, b in msgs))
+                           for arr, msgs, kind in groups),
+                     self._split_key(split)))
+        except TypeError:
+            return None
+
+        with self._lock:
+            self._ensure_mesh(union[0].nproc)
+            key = ("scan", reps, tuple(sub_keys),
+                   tuple((a.name, a.shape, a.dtype.str) for a in union))
+            prog = self._programs.get(key)
+            if prog is None:
+                prog = self._build_cycle_program(step_meta, union, reps)
+                self._programs[key] = prog
+            fn, counts, launches, bytes_c, msgs_c = prog
+
+        def run() -> None:
+            with self._lock:
+                self._ensure_mesh(union[0].nproc)
+                for a in union:
+                    self.sync_device(a)
+                outs = fn(*[self._device[a.name] for a in union])
+                for name, out in zip(names, outs):
+                    self._device[name] = out
+                    self._host_ok[name] = False
+                self.bytes_moved += bytes_c * reps
+                self.messages_executed += msgs_c * reps
+                for k, v in counts.items():
+                    self.collective_counts[k] += v * reps
+                self.device_kernel_launches += launches * reps
+
+        return run
+
+    def _build_cycle_program(self, step_meta, union, reps: int):
+        """Jit the scan: carry = every union array's local block, body =
+        the cycle's chained step tracers, length = ``reps``."""
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+
+        axis = self.axis
+        names = [a.name for a in union]
+        counts = {"all_gather": 0, "all_to_all": 0, "ppermute": 0}
+        launches = 0
+        bytes_c = 0
+        msgs_c = 0
+        step_fns = []
+        for groups, kernel, kw, regions, split in step_meta:
+            per_group, c = self._lower_groups(groups)
+            for k, v in c.items():
+                counts[k] += v
+            for arr, msgs, _kind in groups:
+                for _s, _d, box in msgs:
+                    bytes_c += box.volume() * arr.itemsize
+                    msgs_c += 1
+            lowered_idx = list(zip(
+                [names.index(arr.name) for arr, _m, _k in groups],
+                per_group))
+            out_kernel: List[str] = []
+            if kernel is not None:
+                defined = self._kernel_defined(kernel, regions, union, kw)
+                out_kernel = [n for n in names if n in defined]
+                if out_kernel:
+                    launches += 1
+            step_fns.append(self._make_step_fn(
+                names, lowered_idx, kernel, kw, out_kernel, regions,
+                split))
+
+        def body(*xbs):
+            idx = jax.lax.axis_index(axis)
+
+            def one(carry, _):
+                cs = list(carry)
+                for f in step_fns:
+                    cs = f(cs, idx)
+                return tuple(cs), None
+
+            out, _ = jax.lax.scan(one, tuple(xb[0] for xb in xbs), None,
+                                  length=reps)
+            return tuple(o[None] for o in out)
+
+        fn = jax.jit(compat.shard_map(
+            body, mesh=self._mesh,
+            in_specs=tuple(P(axis) for _ in names),
+            out_specs=tuple(P(axis) for _ in names),
+            check_vma=False), donate_argnums=self._donate(len(names)))
+        self._last_program = (fn, tuple(
+            jax.ShapeDtypeStruct((a.nproc,) + a.shape, a.dtype)
+            for a in union), {"kind": "scan", "reps": reps,
+                              "steps": len(step_meta)})
+        return fn, counts, launches, bytes_c, msgs_c
+
+    def last_program_lowered(self):
+        """Compile the most recent fused step / captured scan program
+        from its stored avals and return ``(compiled, meta)`` — the
+        input of the roofline report in benchmarks/executor_residency.
+        Returns None when nothing was captured or lowering fails."""
+        if self._last_program is None:
+            return None
+        fn, avals, meta = self._last_program
+        try:
+            return fn.lower(*avals).compile(), meta
+        except Exception:
+            return None
 
     # -- reductions -----------------------------------------------------
     def reduce_local(self, arr: "HDArray", per_device, op: str):

@@ -48,6 +48,88 @@ if TYPE_CHECKING:
     from .base import Executor
 
 
+def halo_split(plan: "CommPlan", regions: Sequence, uses: Dict,
+               defs: Dict):
+    """Exact interior/boundary work split for double-buffered halo.
+
+    A work item is *unsafe* (must wait for the exchange) iff one of its
+    use-clause reads touches a section some message is about to deliver
+    to its device.  The unsafe set is computed exactly, from the plan's
+    actual message boxes reflected through the use offsets — NOT from a
+    fixed shrink radius: when the work partition is offset from the
+    data-ownership partition (the Jacobi interior-region idiom),
+    incoming halos reach deeper than the stencil radius, and a
+    radius-based shrink would race.
+
+    Preconditions (else None): every ArrayCommPlan with traffic is
+    HALO-classified, no def'd array receives messages, and every use
+    clause of an array with traffic is a pure integer-offset AccessSpec
+    with the identity work-dim mapping and matching rank.
+
+    Returns ``(interior, boundary)`` — each a per-device tuple of Box
+    tuples (disjoint sub-regions of that device's work region) — or
+    None when the split is not provably safe.  This is shared by the
+    host-side :class:`OverlapScheduler` (interior sweeps overlap the
+    comm thread) and the fused step programs of
+    :class:`~repro.executors.jax_exec.JaxExecutor` (interior compute
+    ordered before the ppermute payload applies, so XLA overlaps them).
+    """
+    from repro.core.offsets import AccessSpec
+    from repro.core.planner import CommKind
+    from repro.core.sections import Box, SectionSet
+
+    live = [ap for ap in plan.arrays if ap.messages]
+    if not live or any(ap.kind != CommKind.HALO for ap in live):
+        return None
+    if {ap.array for ap in live} & set(defs):
+        return None
+    regions = list(regions)
+    wnd = regions[0].ndim
+    specs = {}
+    for ap in live:
+        spec = uses.get(ap.array)
+        # pure offset clauses with the identity work-dim mapping and
+        # matching rank are the only case we can reflect exactly
+        if (not isinstance(spec, AccessSpec) or spec.work_dims is not None
+                or any(len(off) != wnd for off in spec.offsets)):
+            return None
+        specs[ap.array] = spec
+
+    nproc = len(regions)
+    incoming: List[List[Tuple[Box, Tuple]]] = [[] for _ in range(nproc)]
+    for ap in live:
+        for (_src, dst), secs in ap.messages.items():
+            for box in secs:
+                incoming[dst].append((box, specs[ap.array].offsets))
+
+    interior: List[Tuple[Box, ...]] = []
+    boundary: List[Tuple[Box, ...]] = []
+    for q, region in enumerate(regions):
+        if region.is_empty():
+            interior.append((region,))
+            boundary.append(())
+            continue
+        rset = SectionSet.of(region)
+        unsafe = SectionSet.empty(wnd)
+        for box, offsets in incoming[q]:
+            for off in offsets:
+                # work items w reading `box` under offset o: w+o in box
+                bounds = []
+                for d, o in enumerate(off):
+                    if o == "*":
+                        bounds.append(region.bounds[d])
+                    else:
+                        lo, hi = box.bounds[d]
+                        bounds.append((lo - int(o), hi - int(o)))
+                unsafe = unsafe.union(SectionSet.of(Box(tuple(bounds))))
+        unsafe = unsafe.intersect(rset)
+        interior.append(tuple(rset.subtract(unsafe)))
+        boundary.append(tuple(unsafe))
+    if not any(boundary):
+        return None
+    return tuple(interior), tuple(boundary)
+
+
 class OverlapScheduler:
     """Runs one (or a pipeline of) apply_kernel steps with §4.2 overlap."""
 
@@ -153,75 +235,18 @@ class OverlapScheduler:
 
     def _halo_split(self, plan: "CommPlan", part: "Partition",
                     uses: Dict, defs: Dict):
-        """Interior/boundary work-region split for double-buffered halo.
+        """Module-level :func:`halo_split`, reshaped into kernel sweep
+        rounds: ``(interior_rounds, boundary_rounds)``, each a list of
+        per-device Box lists, or None when the split is unsafe."""
+        from repro.core.sections import Box
 
-        A work item is *unsafe* (must wait for the exchange) iff one of
-        its use-clause reads touches a section some message is about to
-        deliver to its device.  The unsafe set is computed exactly, from
-        the plan's actual message boxes reflected through the use
-        offsets — NOT from a fixed shrink radius: when the work
-        partition is offset from the data-ownership partition (the
-        Jacobi interior-region idiom), incoming halos reach deeper than
-        the stencil radius, and a radius-based shrink would race.
-
-        Returns ``(interior_rounds, boundary_rounds)`` — each a list of
-        per-device Box lists (kernel sweeps) — or None when the split
-        is not provably safe.
-        """
-        from repro.core.offsets import AccessSpec
-        from repro.core.planner import CommKind
-        from repro.core.sections import Box, SectionSet
-
-        live = [ap for ap in plan.arrays if ap.messages]
-        if not live or any(ap.kind != CommKind.HALO for ap in live):
+        split = halo_split(plan, part.regions, uses, defs)
+        if split is None:
             return None
-        if {ap.array for ap in live} & set(defs):
-            return None
+        interior, boundary = split
         wnd = part.regions[0].ndim
-        specs = {}
-        for ap in live:
-            spec = uses.get(ap.array)
-            # pure offset clauses with the identity work-dim mapping and
-            # matching rank are the only case we can reflect exactly
-            if (not isinstance(spec, AccessSpec) or spec.work_dims is not None
-                    or any(len(off) != wnd for off in spec.offsets)):
-                return None
-            specs[ap.array] = spec
 
-        nproc = len(part.regions)
-        incoming: List[List[Tuple[Box, Tuple]]] = [[] for _ in range(nproc)]
-        for ap in live:
-            for (_src, dst), secs in ap.messages.items():
-                for box in secs:
-                    incoming[dst].append((box, specs[ap.array].offsets))
-
-        interior: List[Tuple[Box, ...]] = []
-        boundary: List[Tuple[Box, ...]] = []
-        for q, region in enumerate(part.regions):
-            if region.is_empty():
-                interior.append((region,))
-                boundary.append(())
-                continue
-            rset = SectionSet.of(region)
-            unsafe = SectionSet.empty(wnd)
-            for box, offsets in incoming[q]:
-                for off in offsets:
-                    # work items w reading `box` under offset o: w+o in box
-                    bounds = []
-                    for d, o in enumerate(off):
-                        if o == "*":
-                            bounds.append(region.bounds[d])
-                        else:
-                            lo, hi = box.bounds[d]
-                            bounds.append((lo - int(o), hi - int(o)))
-                    unsafe = unsafe.union(SectionSet.of(Box(tuple(bounds))))
-            unsafe = unsafe.intersect(rset)
-            interior.append(tuple(rset.subtract(unsafe)))
-            boundary.append(tuple(unsafe))
-        if not any(boundary):
-            return None
-
-        def _rounds(per_dev: List[Tuple[Box, ...]]) -> List[List[Box]]:
+        def _rounds(per_dev: Sequence[Tuple[Box, ...]]) -> List[List[Box]]:
             empty = Box(tuple((0, 0) for _ in range(wnd)))
             n = max((len(b) for b in per_dev), default=0)
             return [[b[k] if k < len(b) else empty for b in per_dev]

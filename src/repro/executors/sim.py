@@ -105,6 +105,28 @@ class SimExecutor:
                 self.execute_messages(arrays_by_name[ap.array], ap.messages,
                                       kind=ap.kind)
 
+    def execute_step(self, plan, arrays_by_name: Dict[str, "HDArray"],
+                     kernel: Optional[Callable], part_regions,
+                     arrays: Sequence["HDArray"], uses=None, defs=None,
+                     kw=None) -> bool:
+        """One whole apply_kernel step: exchange then kernel.  This
+        default is the classic two-phase path and returns False ("not
+        fused"); backends that trace both into ONE device program
+        override it and return True.  ``uses``/``defs`` are the step's
+        access clauses — fusing backends need them to compute the
+        in-program halo split; the host path only reads the def names."""
+        self.execute_plan(plan, arrays_by_name)
+        if kernel is not None:
+            self.run_kernel(kernel, part_regions, arrays,
+                            defs=tuple(defs) if defs is not None else None,
+                            **(kw or {}))
+        return False
+
+    def capture_cycle(self, cycle, reps: int) -> Optional[Callable]:
+        """Whole-pipeline capture hook (see base.py).  Host backends
+        keep the per-step oracle schedule: nothing to amortize."""
+        return None
+
     # -- residency hooks (no-ops: sim data already lives on the host) ---
     def sync_host(self, arr: "HDArray") -> None:
         pass

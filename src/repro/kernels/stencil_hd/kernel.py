@@ -34,7 +34,10 @@ def _jacobi_kernel(up_ref, mid_ref, dn_ref, o_ref, *, nm: int, m_true: int):
                              dn_ref[:1, :].astype(jnp.float32)], axis=0)
     left = jnp.pad(mid[:, :-1], ((0, 0), (1, 0)))
     right = jnp.pad(mid[:, 1:], ((0, 0), (0, 1)))
-    out = (above + below + left + right) * 0.25
+    # summation order matches jacobi_ref (left+right+above+below) so the
+    # Pallas kernel is BIT-identical to the jnp oracle, not just close;
+    # *0.25 == /4 exactly in IEEE (power-of-two divisor)
+    out = (left + right + above + below) * 0.25
 
     # ghost-cell pass-through: global first/last rows and cols keep x
     row0 = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
