@@ -1,0 +1,175 @@
+"""Heterogeneous balance study: uniform vs oracle-weighted vs
+auto-rebalanced partitions under an injected per-rank slowdown.
+
+The sim executor busy-waits ``rank_cost[p] * volume`` seconds per rank
+per kernel — a deterministic stand-in for a slow device (half-speed
+GPU, thermally throttled core).  Rank 0 is made 2x slower and the same
+Jacobi pipeline runs three ways:
+
+  * **uniform** — equal row blocks (the pre-weights behavior): the
+    critical path is rank 0's doubled kernel time, every step,
+  * **oracle** — weights declared up front, proportional to 1/cost
+    (what a perfect ``DeviceProfileRegistry`` would produce),
+  * **auto** — uniform start + a :class:`Rebalancer`: per-rank step
+    times diverge, the trigger fires, the runtime repartitions every
+    data array mid-pipeline (migration bytes in comm_log) and the
+    remaining steps run on the measured weights.
+
+Gates (SystemExit on failure):
+
+  * auto's steady-state critical path (max per-rank step time) lands
+    within 15% of the oracle's,
+  * auto beats uniform,
+  * at least one mid-pipeline ``__repartition_`` entry in comm_log and
+    a ``rebalance`` record in recovery_log,
+  * all three runs are BIT-IDENTICAL — moving work must not change
+    values.
+
+Run:  PYTHONPATH=src python -m benchmarks.hetero_balance [--quick]
+      python -m benchmarks.run hetero           # quick smoke (CI)
+
+Full mode writes results/hetero_balance.json + BENCH_hetero.json
+(quick mode writes results/hetero_balance_quick.json only).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+NPROC = 4
+BASE_COST = 2e-6          # seconds per work item on a healthy rank
+SLOW = {0: 2 * BASE_COST, 1: BASE_COST, 2: BASE_COST, 3: BASE_COST}
+ORACLE_W = tuple((BASE_COST / SLOW[p]) for p in range(NPROC))
+STEADY_TAIL = 5           # steps averaged for the steady-state metric
+
+
+def _build(rt, n, reps, weights=None):
+    from repro.core import AccessSpec, Box
+    from repro.executors import device_kernel, kernel_put
+
+    FP = AccessSpec.of((0, -1), (0, 1), (-1, 0), (1, 0), (0, 0))
+    ID = AccessSpec.of((0, 0))
+
+    @device_kernel
+    def jac(region, bufs):
+        (i0, i1), (j0, j1) = region.bounds
+        a = bufs["a"]
+        new = 0.25 * (a[i0 - 1:i1 - 1, j0:j1] + a[i0 + 1:i1 + 1, j0:j1]
+                      + a[i0:i1, j0 - 1:j1 - 1] + a[i0:i1, j0 + 1:j1 + 1])
+        return {"b": kernel_put(bufs["b"], (slice(i0, i1), slice(j0, j1)),
+                                new)}
+
+    @device_kernel
+    def cp(region, bufs):
+        sl = region.to_slices()
+        return {"a": kernel_put(bufs["a"], sl, bufs["b"][sl])}
+
+    a = rt.create("a", (n, n))
+    b = rt.create("b", (n, n))
+    pd = rt.partition_row((n, n), weights=weights)
+    pw = rt.partition_row((n, n), region=Box.make((1, n - 1), (1, n - 1)),
+                          weights=weights)
+    data = np.random.default_rng(0).standard_normal((n, n)).astype(np.float32)
+    rt.write(a, data, pd)
+    rt.write(b, data, pd)
+    steps = []
+    for _ in range(reps):
+        steps.append(dict(kernel_name="jac", part_id=pw, kernel=jac,
+                          arrays=[a, b], uses={"a": FP}, defs={"b": ID}))
+        steps.append(dict(kernel_name="cp", part_id=pw, kernel=cp,
+                          arrays=[a, b], uses={"b": ID}, defs={"a": ID}))
+    return a, pd, steps
+
+
+def _run(n, reps, weights=None, rebalance=False):
+    """One sim run under the injected slowdown.  Returns (values,
+    per-step max rank time list, runtime)."""
+    from repro.core import HDArrayRuntime
+    from repro.ft.rebalance import Rebalancer
+
+    rt = HDArrayRuntime(NPROC)
+    a, pd, steps = _build(rt, n, reps, weights=weights)
+    rt.executor.rank_cost = dict(SLOW)
+    reb = None
+    if rebalance:
+        reb = Rebalancer(threshold=1.3, patience=3, min_duration=1e-4,
+                         data_parts={"a": pd, "b": pd})
+    rt.run_pipeline(steps, rebalance=reb)
+    crit = [max(t) for _s, t in rt.planner.stats.rank_step_times]
+    return rt.read_coherent(a), crit, rt
+
+
+def _steady(crit: List[float]) -> float:
+    return float(np.mean(crit[-STEADY_TAIL:]))
+
+
+def main(quick: bool = False) -> dict:
+    n = 32 if quick else 64
+    reps = 12 if quick else 30
+
+    out_u, crit_u, rt_u = _run(n, reps)
+    out_o, crit_o, rt_o = _run(n, reps, weights=ORACLE_W)
+    out_a, crit_a, rt_a = _run(n, reps, rebalance=True)
+
+    # -- parity: moving work must not change values --------------------
+    if not (np.array_equal(out_u, out_o) and np.array_equal(out_u, out_a)):
+        raise SystemExit("PARITY FAILURE: weighted/rebalanced values "
+                         "diverged from the uniform run")
+
+    # -- the rebalance actually happened, as a planned event -----------
+    recs = [r for r in rt_a.recovery_log if r["kind"] == "rebalance"]
+    reparts = [e for e in rt_a.comm_log if e[0].startswith("__repartition_")]
+    if not recs or not reparts:
+        raise SystemExit("no mid-pipeline rebalance recorded "
+                         f"(records={len(recs)} repartitions={len(reparts)})")
+    migration = sum(r["migration_bytes"] for r in recs)
+
+    su, so, sa = _steady(crit_u), _steady(crit_o), _steady(crit_a)
+    print(f"\n{'run':<10} {'steady max-rank ms':>18} {'vs oracle':>9} "
+          f"{'rebalances':>10} {'migrateMB':>9}")
+    for name, s, rt in (("uniform", su, rt_u), ("oracle", so, rt_o),
+                        ("auto", sa, rt_a)):
+        mig = (migration if rt is rt_a else 0)
+        print(f"{name:<10} {s * 1e3:>18.3f} {s / so:>8.2f}x "
+              f"{rt.planner.stats.rebalances:>10} {mig / 1e6:>9.3f}")
+
+    # -- the gates ------------------------------------------------------
+    if sa > 1.15 * so:
+        raise SystemExit(f"GATE FAILURE: auto steady {sa * 1e3:.3f}ms not "
+                         f"within 15% of oracle {so * 1e3:.3f}ms")
+    if sa >= su:
+        raise SystemExit(f"GATE FAILURE: auto steady {sa * 1e3:.3f}ms did "
+                         f"not beat uniform {su * 1e3:.3f}ms")
+
+    rec = recs[0]
+    out = {"quick": quick, "n": n, "steps": 2 * reps, "nproc": NPROC,
+           "rank_cost": {str(p): c for p, c in SLOW.items()},
+           "oracle_weights": list(ORACLE_W),
+           "steady_max_rank_ms": {"uniform": su * 1e3, "oracle": so * 1e3,
+                                  "auto": sa * 1e3},
+           "auto_vs_oracle": sa / so, "auto_vs_uniform": sa / su,
+           "rebalances": rt_a.planner.stats.rebalances,
+           "rebalance_step": rec["step"],
+           "learned_weights": list(rec["weights"]),
+           "migration_bytes": migration}
+    os.makedirs("results", exist_ok=True)
+    dest = ("results/hetero_balance_quick.json" if quick
+            else "results/hetero_balance.json")
+    with open(dest, "w") as f:
+        json.dump(out, f, indent=1)
+    if not quick:
+        with open("BENCH_hetero.json", "w") as f:
+            json.dump(out, f, indent=1)
+    print(f"# -> {dest}" + ("" if quick else " + BENCH_hetero.json"))
+    print(f"# gates passed: auto within {sa / so:.2f}x of oracle, "
+          f"{su / sa:.2f}x faster than uniform, values bit-identical, "
+          f"{migration / 1e6:.3f} MB migrated mid-pipeline")
+    return out
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv[1:])

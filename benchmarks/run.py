@@ -61,6 +61,13 @@ def main() -> None:
         # seeded chaos smoke (CI): parity gates only; run the module
         # directly for the full study that regenerates BENCH_faults.json
         fault_recovery.main(quick=True)
+    if which in ("all", "hetero"):
+        print("\n===== Heterogeneous balance: uniform vs weighted vs "
+              "auto-rebalanced =====")
+        from . import hetero_balance
+        # quick smoke (CI): gates only; run the module directly for the
+        # full study that regenerates BENCH_hetero.json
+        hetero_balance.main(quick=True)
     print(f"\n# benchmarks done in {time.time()-t0:.1f}s")
 
 

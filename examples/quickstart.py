@@ -84,6 +84,19 @@ def main(backend: str = "sim"):
     print(f"reduce(sum) over COL partition: {total} "
           f"(planned {red_bytes} B: {dict((k, b) for _a, k, b in kinds)})")
 
+    # Heterogeneous mesh: weights= makes the row blocks proportional to
+    # device capability — here rank 0 is twice as capable, so it owns
+    # half the rows.  Same planner, same kernels; repartition migrates
+    # C onto the weighted layout as ordinary planned messages.
+    p_w = rt.partition_row((n, n), weights=(2, 1, 1, 1))
+    rt.repartition(hC, part, p_w)
+    rows0 = rt.parts[p_w].region(0).bounds[0]
+    print(f"weighted partition (2,1,1,1): rank 0 owns rows "
+          f"{rows0[0]}..{rows0[1]} of {n} "
+          f"(migration: {rt.comm_log[-1][1]} B planned)")
+    if backend != "null":
+        np.testing.assert_allclose(rt.read(hC, p_w), A @ B, rtol=2e-4)
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()

@@ -128,10 +128,26 @@ class PlannerStats:
     elastic_shrinks: int = 0     # permanent rank losses absorbed
     straggler_events: int = 0    # StragglerMonitor threshold crossings
     steps_replayed: int = 0      # pipeline steps re-executed after restore
+    # heterogeneity counters (weighted partitions + rebalancing)
+    rebalances: int = 0          # mid-pipeline weight recomputations
+    # per-rank step-time history [(step, (t_0..t_{P-1})), ...] — newest
+    # last, capped at RANK_HISTORY_CAP; the divergence record behind a
+    # rebalance (the scalar EWMA alone can't show WHICH rank diverged)
+    rank_step_times: List[Tuple[int, Tuple[float, ...]]] = field(
+        default_factory=list)
+
+    RANK_HISTORY_CAP = 512
 
     @property
     def plans_cached(self) -> int:
         return self.hits_history + self.hits_state_compare
+
+    def note_rank_times(self, step: int, times: Sequence[float]) -> None:
+        """Record one step's per-rank kernel wall times (executor
+        ``last_rank_times``), keeping a bounded rolling history."""
+        self.rank_step_times.append((int(step), tuple(times)))
+        if len(self.rank_step_times) > self.RANK_HISTORY_CAP:
+            del self.rank_step_times[:-self.RANK_HISTORY_CAP]
 
     def reset(self) -> None:
         self.plans_computed = self.hits_history = self.hits_state_compare = 0
@@ -141,6 +157,8 @@ class PlannerStats:
         self.python_dispatches_per_step = 1.0
         self.recoveries = self.checkpoint_restores = 0
         self.elastic_shrinks = self.straggler_events = self.steps_replayed = 0
+        self.rebalances = 0
+        self.rank_step_times = []
 
 
 def _access_id(access: Optional[Access]) -> int:

@@ -41,7 +41,8 @@ from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.executors import OverlapScheduler, make_executor
+from repro.executors import (DeviceProfileRegistry, OverlapScheduler,
+                             make_executor)
 
 from .comm import lower_plan
 from .hdarray import HDArray
@@ -59,15 +60,27 @@ REDUCE_OPS = ("sum", "prod", "max", "min")
 class HDArrayRuntime:
     def __init__(self, nproc: int, materialize: bool = True,
                  backend: Optional[str] = None, overlap: bool = False,
-                 executor=None):
+                 executor=None, profiles=None):
         """``backend`` selects the executor ("sim" / "null" / "jax");
         ``materialize=False`` is the legacy spelling of backend="null".
         ``overlap=True`` enables the §4.2 comm/compute-overlap schedule.
-        An explicit ``executor`` instance overrides ``backend``."""
+        An explicit ``executor`` instance overrides ``backend``.
+        ``profiles`` (a :class:`~repro.executors.profiles.
+        DeviceProfileRegistry` or a sequence of ``DeviceProfile``)
+        declares per-rank device capabilities; when given, every
+        partition this runtime creates defaults to the registry's
+        capability-proportional weights instead of an even split."""
         if backend is None:
             backend = "sim" if materialize else "null"
         self.nproc = nproc
         self.backend = backend
+        if profiles is not None and not hasattr(profiles, "weights"):
+            reg = DeviceProfileRegistry(nproc)
+            for prof in profiles:
+                reg.declare(prof.rank, prof.device_class, prof.flops,
+                            prof.bandwidth)
+            profiles = reg
+        self.profiles = profiles
         self.parts = PartitionTable()
         self.planner = Planner()
         self.executor = executor if executor is not None \
@@ -95,17 +108,35 @@ class HDArrayRuntime:
             self._scheduler.shutdown()
 
     # -- partitions -------------------------------------------------------
-    def partition_row(self, domain, region: Optional[Box] = None) -> int:
-        return self.parts.new_row(domain, self.nproc, region)
+    # Each factory takes optional per-device `weights` (capability-
+    # proportional split; uniform == even, bit-identically).  With no
+    # explicit weights the runtime's device profiles, when declared,
+    # supply the default.
+    def _default_weights(self, weights):
+        if weights is not None or self.profiles is None:
+            return weights
+        return self.profiles.weights()
 
-    def partition_col(self, domain, region: Optional[Box] = None) -> int:
-        return self.parts.new_col(domain, self.nproc, region)
+    def partition_row(self, domain, region: Optional[Box] = None,
+                      weights=None) -> int:
+        return self.parts.new_row(domain, self.nproc, region,
+                                  self._default_weights(weights))
 
-    def partition_block(self, domain, grid=None, region: Optional[Box] = None) -> int:
-        return self.parts.new_block(domain, self.nproc, grid, region)
+    def partition_col(self, domain, region: Optional[Box] = None,
+                      weights=None) -> int:
+        return self.parts.new_col(domain, self.nproc, region,
+                                  self._default_weights(weights))
 
-    def partition_manual(self, domain, regions: Sequence[Box]) -> int:
-        return self.parts.new_manual(domain, regions)
+    def partition_block(self, domain, grid=None, region: Optional[Box] = None,
+                        weights=None) -> int:
+        return self.parts.new_block(domain, self.nproc, grid, region,
+                                    self._default_weights(weights))
+
+    def partition_manual(self, domain, regions: Sequence[Box],
+                         weights=None) -> int:
+        # manual regions are explicit: weights are bookkeeping, never a
+        # profile default
+        return self.parts.new_manual(domain, regions, weights)
 
     # -- I/O ---------------------------------------------------------------
     def write(self, arr: HDArray, data: np.ndarray, part_id: int) -> None:
@@ -193,7 +224,7 @@ class HDArrayRuntime:
         return plan
 
     def run_pipeline(self, steps: Sequence[Dict],
-                     recovery=None) -> list:
+                     recovery=None, rebalance=None) -> list:
         """Run a program of apply_kernel steps with the Fig. 7 schedule:
         step i+1's planning overlaps step i's message execution.  Each
         step: dict(kernel_name=, part_id=, kernel=, arrays=, uses=,
@@ -222,18 +253,38 @@ class HDArrayRuntime:
         jitted ``lax.scan``); the planner then fast-replays each
         covered step's metadata so ``comm_log`` and the GDEF state
         evolve exactly as the unfused schedule.  Host backends decline
-        and nothing changes."""
+        and nothing changes.
+
+        With ``rebalance`` (a :class:`repro.ft.rebalance.Rebalancer`,
+        or ``RecoveryPolicy.rebalancer`` on the recovery path) the
+        pipeline watches the executor's per-rank kernel timings and,
+        when they diverge persistently, repartitions mid-flight onto
+        measured capability-proportional weights: the rebalancer's
+        ``data_parts`` arrays migrate through the ordinary planned
+        ``repartition`` (bytes in ``comm_log``), the remaining steps'
+        work partitions are rewritten, and a ``"rebalance"`` record
+        lands in ``recovery_log``.  Scan capture is gated on the mesh
+        looking balanced, so captures re-arm on the new layout."""
         if recovery is not None:
-            return self._run_pipeline_recoverable(list(steps), recovery)
+            return self._run_pipeline_recoverable(list(steps), recovery,
+                                                  rebalance)
         if self._scheduler is None:
-            return self._run_pipeline_serial(list(steps))
+            # rebalancing rewrites the remaining steps' part ids: work
+            # on copies so the caller's dicts survive
+            if rebalance is not None:
+                steps = [dict(st) for st in steps]
+            return self._run_pipeline_serial(list(steps), rebalance)
+        if rebalance is not None:
+            raise ValueError(
+                "rebalance requires the serial or recovery pipeline "
+                "path (overlap=False, or a RecoveryPolicy)")
         return self._scheduler.pipeline(self, list(steps))
 
     # -- steady-state capture (one dispatch for K steps) -----------------
     #: longest cycle period the serial pipeline looks for
     _MAX_CYCLE_PERIOD = 4
 
-    def _run_pipeline_serial(self, steps: list) -> list:
+    def _run_pipeline_serial(self, steps: list, rebalance=None) -> list:
         stats = self.planner.stats
         n = len(steps)
         plans: list = [None] * n
@@ -241,7 +292,8 @@ class HDArrayRuntime:
         try_capture = True
         i = 0
         while i < n:
-            if try_capture:
+            if try_capture and (rebalance is None
+                                or rebalance.allow_capture()):
                 d = self._cycle_period(steps, steady, i)
                 if d:
                     # only the upcoming steps that literally repeat the
@@ -284,6 +336,18 @@ class HDArrayRuntime:
             # the commit — the step touched no set algebra at all
             steady[i] = (plans[i].cached and stats.commit_replays - before
                          == len(plans[i].arrays))
+            rank_times = getattr(self.executor, "last_rank_times", None)
+            if rank_times is not None:
+                stats.note_rank_times(i, rank_times)
+            if rebalance is not None:
+                part = self.parts[st["part_id"]]
+                volumes = tuple(r.volume() for r in part.regions)
+                if rebalance.observe(i, rank_times, volumes,
+                                     weights=part.weights):
+                    # steps[i+1:] move to the reweighted partitions;
+                    # their steady-state witness rebuilds on the new
+                    # geometry before capture is offered again
+                    self._apply_rebalance(rebalance, steps, i + 1)
             i += 1
         return plans
 
@@ -333,7 +397,8 @@ class HDArrayRuntime:
         return plan
 
     # -- fault-tolerant pipeline (docs/fault-tolerance.md) ---------------
-    def _run_pipeline_recoverable(self, steps: list, policy) -> list:
+    def _run_pipeline_recoverable(self, steps: list, policy,
+                                  rebalance=None) -> list:
         # ft imports stay function-local: repro.ft imports repro.core
         from repro.ft.faults import RankLostFault, StepGuard
 
@@ -348,6 +413,12 @@ class HDArrayRuntime:
         plans: list = [None] * n
         live = sorted(range(self.nproc))
         saved: set = set()
+        reb = rebalance if rebalance is not None \
+            else getattr(policy, "rebalancer", None)
+        if reb is not None and reb.data_parts is None:
+            # share the policy's canonical-layout mapping so a shrink
+            # and a rebalance keep updating the same dict
+            reb.data_parts = policy.data_parts
 
         def restore_fn():
             k = cm.restore_runtime(self, parts=policy.data_parts,
@@ -381,9 +452,19 @@ class HDArrayRuntime:
                 i = restored
                 continue
             dt = policy.clock() - t0
+            rank_times = getattr(self.executor, "last_rank_times", None)
+            if rank_times is not None:
+                stats.note_rank_times(i, rank_times)
             if (policy.monitor is not None
-                    and policy.monitor.observe(i, dt)):
+                    and policy.monitor.observe(i, dt,
+                                               rank_times=rank_times)):
                 stats.straggler_events += 1
+            if reb is not None:
+                part = self.parts[steps[i]["part_id"]]
+                volumes = tuple(r.volume() for r in part.regions)
+                if reb.observe(i, rank_times, volumes,
+                               weights=part.weights):
+                    self._apply_rebalance(reb, steps, i + 1)
             plans[i] = out
             i += 1
         return plans
@@ -459,6 +540,45 @@ class HDArrayRuntime:
             "plan": ElasticPlan(len(live) + 1, len(live),
                                 (len(live),), migration)})
         return cm_step
+
+    # -- measurement-driven rebalancing (ft/rebalance.py) -----------------
+    def _apply_rebalance(self, reb, steps: list, next_i: int) -> None:
+        """React to a Rebalancer trigger: rebuild every partition the
+        remaining steps (and the rebalancer's ``data_parts`` arrays)
+        use with the measured capability weights, migrate the data
+        arrays through the ordinary planned ``repartition`` (coherence-
+        gated, bytes in ``comm_log``), rewrite the remaining steps'
+        part ids, and append the audit record — per-rank timing history
+        included — to ``recovery_log``."""
+        from repro.ft.rebalance import reweighted_partition
+
+        stats = self.planner.stats
+        weights = reb.target_weights(self.nproc)
+        remap: Dict[int, int] = {}
+
+        def new_pid(old: int) -> int:
+            if old not in remap:
+                remap[old] = reweighted_partition(self, old, weights)
+            return remap[old]
+
+        migration = 0
+        if reb.data_parts:
+            for name, pid in list(reb.data_parts.items()):
+                tgt = new_pid(pid)
+                plan = self.repartition(self.arrays[name], pid, tgt)
+                migration += plan.bytes_total
+                reb.data_parts[name] = tgt
+        for st in steps[next_i:]:
+            st["part_id"] = new_pid(st["part_id"])
+        stats.rebalances += 1
+        self.recovery_log.append({
+            "kind": "rebalance", "step": next_i - 1,
+            "weights": tuple(weights),
+            # the per-rank divergence that triggered this decision
+            "rank_times": list(reb.history[-reb.patience:]),
+            "migration_bytes": migration,
+            "parts": dict(remap)})
+        reb.note_rebalanced(next_i - 1)
 
     def log_plan(self, kernel_name: str, plan: CommPlan) -> None:
         self.comm_log.append(

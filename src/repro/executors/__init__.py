@@ -31,11 +31,13 @@ from .base import Executor, available_backends, make_executor, register_executor
 from .sim import SimExecutor
 from .null import NullExecutor
 from .jax_exec import JaxExecutor
-from .kernels import device_kernel, kernel_put
+from .kernels import device_kernel, kernel_put, resolve_kernel
 from .overlap import OverlapScheduler, halo_split
+from .profiles import DeviceProfile, DeviceProfileRegistry
 
 __all__ = [
     "Executor", "available_backends", "make_executor", "register_executor",
     "SimExecutor", "NullExecutor", "JaxExecutor", "OverlapScheduler",
-    "device_kernel", "kernel_put", "halo_split",
+    "device_kernel", "kernel_put", "resolve_kernel", "halo_split",
+    "DeviceProfile", "DeviceProfileRegistry",
 ]

@@ -64,11 +64,20 @@ Backends register with :func:`register_executor` and are constructed by
 name via :func:`make_executor` — the hook behind
 ``HDArrayRuntime(nproc, backend=...)``.
 
+``device_class`` (attribute) names the architecture kernels execute on
+(``"sim"`` / ``"null"`` / the jax platform ``"cpu"``/``"gpu"``/
+``"tpu"``) — the key :func:`repro.executors.kernels.resolve_kernel`
+uses to pick a per-architecture ``@kernel.variant`` at trace time.
+
 Every executor also keeps three counters the benchmarks and tests
 read: ``bytes_moved`` (payload bytes of executed messages),
 ``messages_executed`` (one per transferred box) and
 ``reduce_elements`` (elements folded by local reductions — the flop
 accounting the metadata-only backend keeps without touching data).
+``last_rank_times`` exposes the per-rank wall time of the latest
+kernel sweep when the backend can attribute it (sim; None elsewhere or
+on kernel-less steps) — the heterogeneity signal consumed by the
+per-rank StragglerMonitor and the ft Rebalancer.
 """
 from __future__ import annotations
 
@@ -92,6 +101,8 @@ class Executor(Protocol):
     messages_executed: int
     reduce_elements: int
     holds_data: bool
+    device_class: str
+    last_rank_times: Optional[Tuple[float, ...]]
 
     def allocate(self, arr: "HDArray") -> None: ...
 

@@ -106,6 +106,7 @@ from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Optional,
 import numpy as np
 
 from .base import register_executor
+from .kernels import resolve_kernel
 from .sim import SimExecutor
 
 if TYPE_CHECKING:
@@ -194,7 +195,21 @@ class JaxExecutor(SimExecutor):
         self._device: Dict[str, Any] = {}
         self._device_ok: Dict[str, bool] = {}
         self._host_ok: Dict[str, bool] = {}
+        self._device_class: Optional[str] = None
         self._lock = threading.RLock()
+
+    @property
+    def device_class(self) -> str:  # type: ignore[override]
+        """Kernel-variant resolution key: the jax platform name
+        ("cpu"/"gpu"/"tpu").  Resolved lazily — ``default_backend()``
+        initializes the backend, which must come after
+        ``ensure_host_devices`` — and only at execute/trace time, the
+        same moment the device paths first touch the backend anyway."""
+        if self._device_class is None:
+            import jax
+
+            self._device_class = jax.default_backend()
+        return self._device_class
 
     # -- mesh -----------------------------------------------------------
     def _ensure_mesh(self, nproc: int):
@@ -673,6 +688,7 @@ class JaxExecutor(SimExecutor):
         only arrays the kernel may write lose their device copy —
         read-only inputs stay resident.  Without it every touched array
         is conservatively invalidated."""
+        kernel = resolve_kernel(kernel, self.device_class)
         if self.resident and getattr(kernel, "__hdarray_device__", False):
             self._run_kernel_device(kernel, part_regions, arrays, **kw)
             return
@@ -692,6 +708,8 @@ class JaxExecutor(SimExecutor):
     def _run_kernel_device(self, kernel, part_regions, arrays, **kw) -> None:
         import jax
 
+        # fused device sweeps have no per-rank host timing
+        self.last_rank_times = None
         with self._lock:
             self._ensure_mesh(arrays[0].nproc)
             for a in arrays:
@@ -891,6 +909,7 @@ class JaxExecutor(SimExecutor):
         the classic two-phase path and returns False.
         """
         kw = kw or {}
+        kernel = resolve_kernel(kernel, self.device_class)
         if (not self.resident or kernel is None
                 or not getattr(kernel, "__hdarray_device__", False)):
             return super().execute_step(
@@ -964,6 +983,7 @@ class JaxExecutor(SimExecutor):
     def _dispatch_step(self, prog, groups, arrays) -> None:
         """Run a built step program and account its counters (caller
         holds the lock and has synced every array to device)."""
+        self.last_rank_times = None   # one program, no per-rank timing
         mode = prog[0]
         if mode == "fused":
             _m, fn, out_names, counts, launches = prog
@@ -1141,8 +1161,9 @@ class JaxExecutor(SimExecutor):
             return None
         from .overlap import halo_split
 
-        for st in cycle:
-            k = st["kernel"]
+        resolved = [resolve_kernel(st["kernel"], self.device_class)
+                    for st in cycle]
+        for k in resolved:
             if k is not None and not getattr(k, "__hdarray_device__",
                                              False):
                 return None
@@ -1162,8 +1183,7 @@ class JaxExecutor(SimExecutor):
         try:
             step_meta = []
             sub_keys = []
-            for st in cycle:
-                kernel = st["kernel"]
+            for st, kernel in zip(cycle, resolved):
                 kw = st.get("kw") or {}
                 kw_key: Any = tuple(sorted(kw.items()))
                 hash((kernel, kw_key))

@@ -33,10 +33,30 @@ usually all a stencil/GEMM body needs to be convention-agnostic::
 Region bounds are static Python ints at trace time (the partition is
 known when the program is built), so plain basic slicing traces fine;
 only the *assignment* needs :func:`kernel_put`.
+
+Device kernels may also carry **per-architecture variants** (Parla's
+``@specialized`` idiom): the decorated function is the portable default
+and ``@kernel.variant("gpu", "tpu")`` registers an implementation that
+replaces it on executors of that device class.  Executors resolve the
+variant through :func:`resolve_kernel` at trace/execute time — sim and
+null resolve class ``"sim"``, the jax backend resolves its platform
+(``"cpu"``/``"gpu"``/``"tpu"``) — so one pipeline step can run a jnp
+reference on the host oracle and a Pallas tile kernel on device::
+
+    @device_kernel
+    def sweep(region, bufs):            # portable default
+        ...
+
+    @sweep.variant("tpu")
+    def sweep_tpu(region, bufs):        # picked on TPU executors only
+        ...
+
+Variants share the default's calling convention and def-clause; they
+are about HOW to compute, never WHAT.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -47,9 +67,43 @@ def device_kernel(fn: Callable) -> Callable:
     Contract: ``fn(region, bufs, **kw) -> {name: updated_buffer}``,
     returning the FULL updated per-device buffer of every array it
     defines and mutating nothing.  See the module docstring.
+
+    The returned function gains ``.variant(*device_classes)``, a
+    decorator registering a per-architecture implementation resolved
+    by :func:`resolve_kernel`.
     """
     fn.__hdarray_device__ = True
+    fn.__hdarray_variants__ = {}
+
+    def variant(*device_classes: str) -> Callable:
+        if not device_classes:
+            raise ValueError("variant() needs at least one device class")
+
+        def register(impl: Callable) -> Callable:
+            impl.__hdarray_device__ = True
+            impl.__hdarray_variants__ = {}  # variants are terminal
+            for dc in device_classes:
+                fn.__hdarray_variants__[str(dc)] = impl
+            return impl
+
+        return register
+
+    fn.variant = variant
     return fn
+
+
+def resolve_kernel(kernel: Optional[Callable],
+                   device_class: Optional[str]) -> Optional[Callable]:
+    """Pick the implementation of ``kernel`` for ``device_class``:
+    the registered variant if one matches, else the portable default.
+    Executors call this once per step BEFORE building program-cache
+    keys, so a resolved variant is also the cache identity."""
+    if kernel is None or device_class is None:
+        return kernel
+    variants = getattr(kernel, "__hdarray_variants__", None)
+    if not variants:
+        return kernel
+    return variants.get(str(device_class), kernel)
 
 
 def kernel_put(buf, slices, value):

@@ -27,6 +27,7 @@ class NullExecutor(SimExecutor):
     """Counts plan traffic without holding any data."""
 
     holds_data = False  # checkpoints carry metadata only, no payload
+    device_class = "null"
 
     def allocate(self, arr: "HDArray") -> None:
         self.buffers[arr.name] = None

@@ -10,11 +10,13 @@ program.
 """
 from __future__ import annotations
 
+import time
 from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .base import register_executor
+from .kernels import resolve_kernel
 
 if TYPE_CHECKING:
     from repro.core.hdarray import HDArray
@@ -32,6 +34,7 @@ class SimExecutor:
     """Executes plans over per-device full-size numpy buffers."""
 
     holds_data = True   # this backend materializes real array bytes
+    device_class = "sim"  # kernel-variant resolution key (resolve_kernel)
 
     def __init__(self, nproc: Optional[int] = None) -> None:
         # nproc is accepted for uniform registry construction; the sim
@@ -41,6 +44,16 @@ class SimExecutor:
         self.bytes_moved: int = 0
         self.messages_executed: int = 0
         self.reduce_elements: int = 0
+        # per-rank wall time of the latest kernel sweep (None when the
+        # last step ran no kernel, or on backends that can't attribute
+        # time per rank) — the heterogeneity signal for the ft
+        # Rebalancer and the per-rank StragglerMonitor.
+        self.last_rank_times: Optional[Tuple[float, ...]] = None
+        # injected per-rank slowdown for heterogeneity experiments:
+        # rank -> seconds of extra busy time PER WORK ITEM, so a rank's
+        # kernel time scales with its region volume like a real slow
+        # device's would.
+        self.rank_cost: Dict[int, float] = {}
 
     def allocate(self, arr: "HDArray") -> None:
         self.buffers[arr.name] = [
@@ -115,6 +128,7 @@ class SimExecutor:
         override it and return True.  ``uses``/``defs`` are the step's
         access clauses — fusing backends need them to compute the
         in-program halo split; the host path only reads the def names."""
+        self.last_rank_times = None
         self.execute_plan(plan, arrays_by_name)
         if kernel is not None:
             self.run_kernel(kernel, part_regions, arrays,
@@ -144,14 +158,26 @@ class SimExecutor:
         convention), which is applied to the mirrors here.  ``defs``
         (the def-clause array names) is bookkeeping for residency-aware
         backends; host-memory backends ignore it."""
+        kernel = resolve_kernel(kernel, self.device_class)
+        times = [0.0] * len(part_regions)
         for p, region in enumerate(part_regions):
             if region.is_empty():
                 continue
             bufs = {a.name: self.buffers[a.name][p] for a in arrays}
+            t0 = time.perf_counter()
             res = kernel(region, bufs, **kw)
             if isinstance(res, dict):
                 for name, val in res.items():
                     bufs[name][...] = np.asarray(val)
+            cost = self.rank_cost.get(p)
+            if cost:
+                # busy-wait (not sleep) to the modeled duration so the
+                # measured time is deterministic at ms scale
+                target = t0 + cost * region.volume()
+                while time.perf_counter() < target:
+                    pass
+            times[p] = time.perf_counter() - t0
+        self.last_rank_times = tuple(times)
 
     # -- reductions (HDArrayReduce, local phase + global combine) -------
     def reduce_local(self, arr: "HDArray",

@@ -24,7 +24,10 @@ Components:
   * StragglerMonitor — EWMA of per-step wall time; flags steps slower
     than ``threshold`` x the moving average.  ``run_pipeline`` feeds it
     per-step timings and surfaces crossings in
-    ``PlannerStats.straggler_events``.
+    ``PlannerStats.straggler_events``.  With per-rank timings
+    (executor ``last_rank_times``) it also keeps one baseline per rank
+    — stable detection of a persistently slow device, and the speed
+    signal :mod:`repro.ft.rebalance` turns into new partition weights.
   * RecoveryPolicy — everything run_pipeline needs to survive faults:
     the CheckpointManager + interval, the injector/monitor hooks, and
     the retry/backoff knobs.
@@ -41,18 +44,20 @@ Components:
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import time
 from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
                     Tuple)
 
 import numpy as np
 
-from repro.core.partition import _even_splits
+from repro.core.partition import _even_splits, _weighted_splits
 from repro.core.sections import Box, SectionSet
 
 if TYPE_CHECKING:
     from repro.ckpt.checkpoint import CheckpointManager
     from repro.core.runtime import HDArrayRuntime
+    from repro.ft.rebalance import Rebalancer
 
 
 class TransientFault(RuntimeError):
@@ -124,21 +129,50 @@ class FaultInjector:
 class StragglerEvent:
     step: int
     duration: float
-    ewma: float
+    ewma: float                  # the baseline the duration was judged against
+    rank: Optional[int] = None   # None: whole-step (scalar) detection
 
 
 class StragglerMonitor:
+    """EWMA straggler detection, scalar and per-rank.
+
+    The scalar path (``observe(step, duration)``) flags whole steps
+    slower than ``threshold`` x the step-time EWMA, as before.  When
+    the executor can attribute time per rank (``last_rank_times``),
+    ``observe(..., rank_times=...)`` additionally keeps ONE baseline
+    PER RANK and flags rank p against the median of the OTHER ranks'
+    baselines.  A persistently slow rank therefore never raises the
+    bar it is judged against — the scalar EWMA alone absorbs a
+    persistent straggler into the average until it stops being flagged
+    — and ``rank_ewma`` doubles as the per-device speed signal the ft
+    Rebalancer consumes.  ``min_duration`` floors per-rank detection so
+    microsecond-scale timing noise on tiny test kernels cannot flag."""
+
     def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
-                 warmup: int = 3):
+                 warmup: int = 3, min_duration: float = 1e-3):
         self.threshold = threshold
         self.alpha = alpha
         self.warmup = warmup
+        self.min_duration = min_duration
         self.ewma: Optional[float] = None
         self.events: List[StragglerEvent] = []
         self._n = 0
+        # per-rank EWMA of kernel wall time + bounded raw history
+        self.rank_ewma: Dict[int, float] = {}
+        self.rank_history: List[Tuple[int, Tuple[float, ...]]] = []
+        self._rank_n = 0
 
-    def observe(self, step: int, duration: float) -> bool:
-        """Returns True if this step is a straggler."""
+    HISTORY_CAP = 512
+
+    def observe(self, step: int, duration: float,
+                rank_times: Optional[Sequence[float]] = None) -> bool:
+        """Returns True if this step (or any rank in it) is a straggler."""
+        flagged = self._observe_scalar(step, duration)
+        if rank_times is not None:
+            flagged = self._observe_ranks(step, rank_times) or flagged
+        return flagged
+
+    def _observe_scalar(self, step: int, duration: float) -> bool:
         self._n += 1
         if self.ewma is None:
             self.ewma = duration
@@ -151,6 +185,32 @@ class StragglerMonitor:
             # stragglers don't poison the average
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * duration
         return is_straggler
+
+    def _observe_ranks(self, step: int,
+                       rank_times: Sequence[float]) -> bool:
+        self._rank_n += 1
+        self.rank_history.append((step, tuple(float(t) for t in rank_times)))
+        if len(self.rank_history) > self.HISTORY_CAP:
+            del self.rank_history[:-self.HISTORY_CAP]
+        work = [(p, float(t)) for p, t in enumerate(rank_times) if t > 0]
+        flagged = False
+        # judge against the baselines BEFORE folding this step in
+        if self._rank_n > self.warmup and len(work) >= 2:
+            for p, t in work:
+                others = [self.rank_ewma[q] for q, _t in work
+                          if q != p and q in self.rank_ewma]
+                if not others:
+                    continue
+                baseline = statistics.median(others)
+                if t >= self.min_duration and t > self.threshold * baseline:
+                    self.events.append(
+                        StragglerEvent(step, t, baseline, rank=p))
+                    flagged = True
+        for p, t in work:
+            e = self.rank_ewma.get(p)
+            self.rank_ewma[p] = (t if e is None
+                                 else (1 - self.alpha) * e + self.alpha * t)
+        return flagged
 
 
 # -- retry/backoff ------------------------------------------------------
@@ -208,6 +268,10 @@ class RecoveryPolicy:
     data_parts: Optional[Dict[str, int]] = None
     clock: Callable[[], float] = time.perf_counter
     sleep: Callable[[float], None] = time.sleep
+    # optional measurement-driven weight rebalancing (ft.rebalance):
+    # consumes the same per-rank timings the monitor sees and triggers
+    # a mid-pipeline repartition when they diverge persistently
+    rebalancer: Optional["Rebalancer"] = None
 
 
 # -- partition algebra of a mesh shrink ----------------------------------
@@ -235,21 +299,35 @@ def coverage_box(regions: Sequence[Box]) -> Box:
 def shrink_partition(rt: "HDArrayRuntime", part_id: int,
                      live: Sequence[int]) -> int:
     """The repartition TARGET of a mesh shrink: re-split the
-    partition's coverage box evenly over the surviving ranks (dim-0
+    partition's coverage box over the surviving ranks (dim-0
     contiguous chunks, like the paper's ``HDArrayPartition``); dead
-    ranks get empty regions.  Returns the new partition id."""
+    ranks get empty regions.  A weighted partition keeps the
+    survivors' capability proportions (their weights, renormalized);
+    unweighted partitions split evenly as before.  Returns the new
+    partition id."""
     part = rt.parts[part_id]
     live = sorted(live)
     bbox = coverage_box(part.regions)
     nd = len(bbox.bounds)
     lo0, hi0 = bbox.bounds[0]
-    splits = _even_splits(hi0 - lo0, len(live))
+    w = None
+    if part.weights is not None:
+        w = [part.weights[p] for p in live]
+        if sum(w) <= 0:
+            w = None               # all weight died with the lost ranks
+    splits = (_weighted_splits(hi0 - lo0, w) if w is not None
+              else _even_splits(hi0 - lo0, len(live)))
     regions = [_empty_box(nd)] * part.nproc
     for j, p in enumerate(live):
         b = list(bbox.bounds)
         b[0] = (lo0 + splits[j][0], lo0 + splits[j][1])
         regions[p] = Box(tuple(b))
-    return rt.partition_manual(part.domain, regions)
+    weights = None
+    if w is not None:
+        weights = [0.0] * part.nproc
+        for p in live:
+            weights[p] = part.weights[p]
+    return rt.partition_manual(part.domain, regions, weights=weights)
 
 
 def inherit_partition(rt: "HDArrayRuntime", part_id: int,

@@ -80,11 +80,12 @@ def _cp(region, bufs):
     return {"a": kernel_put(bufs["a"], sl, bufs["b"][sl])}
 
 
-def _build(rt, materialized=True):
+def _build(rt, materialized=True, weights=None):
     a = rt.create("a", (N, N))
     b = rt.create("b", (N, N))
-    pd = rt.partition_row((N, N))
-    pw = rt.partition_row((N, N), region=Box.make((1, N - 1), (1, N - 1)))
+    pd = rt.partition_row((N, N), weights=weights)
+    pw = rt.partition_row((N, N), region=Box.make((1, N - 1), (1, N - 1)),
+                          weights=weights)
     data = np.random.default_rng(0).standard_normal((N, N)).astype(np.float32)
     rt.write(a, data if materialized else None, pd)
     rt.write(b, data if materialized else None, pd)
@@ -99,17 +100,17 @@ def _build(rt, materialized=True):
     return a, b, pd, steps
 
 
-def _reference(backend):
+def _reference(backend, weights=None):
     rt = HDArrayRuntime(NPROC, backend=backend)
-    a, _b, _pd, steps = _build(rt)
+    a, _b, _pd, steps = _build(rt, weights=weights)
     rt.run_pipeline(steps)
     return rt.read_coherent(a)
 
 
-def _run_faulted(backend, specs, interval=3, overlap=False):
+def _run_faulted(backend, specs, interval=3, overlap=False, weights=None):
     with tempfile.TemporaryDirectory() as d:
         rt = HDArrayRuntime(NPROC, backend=backend, overlap=overlap)
-        a, _b, pd, steps = _build(rt)
+        a, _b, pd, steps = _build(rt, weights=weights)
         pol = RecoveryPolicy(checkpoint=CheckpointManager(d),
                              interval=interval,
                              injector=FaultInjector(specs),
@@ -233,6 +234,85 @@ def test_two_rank_losses_sim():
     assert np.array_equal(out, ref)
     assert rt.planner.stats.elastic_shrinks == 2
     assert rt.recovery_log[-1]["live"] == [0, 2]
+
+
+# ---------------------------------------------------------------------
+# weighted meshes: the same chaos on capability-proportional (unequal)
+# boxes — recovery must stay invisible in the values AND the shrink
+# must preserve the survivors' capability proportions
+# ---------------------------------------------------------------------
+W = (2, 1, 1, 1)                      # rank 0 twice as capable
+
+
+@pytest.mark.parametrize("step", [0, 4, STEPS - 1])
+def test_weighted_transient_sim(step):
+    ref = _reference("sim", weights=W)
+    rt, out, _pol = _run_faulted("sim", [step], weights=W)
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.recoveries == 1
+
+
+@pytest.mark.parametrize("step", [0, 4, STEPS - 1])
+def test_weighted_rank_loss_sim(step):
+    ref = _reference("sim", weights=W)
+    rt, out, pol = _run_faulted(
+        "sim", [FaultSpec(step, kind="rank", rank=2)], weights=W)
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.elastic_shrinks == 1
+    rec, = rt.recovery_log
+    assert rec["kind"] == "rank_loss" and rec["live"] == [0, 1, 3]
+    # the shrunk data layout keeps the survivors' capability weights
+    part = rt.parts[pol.data_parts["a"]]
+    assert part.weights == (2.0, 1.0, 0.0, 1.0)
+    assert part.regions[2].is_empty()
+    # rank 0 keeps twice the rows of each unit-weight survivor
+    rows = [hi - lo for (lo, hi), _ in
+            (part.regions[p].bounds for p in (0, 1, 3))]
+    assert rows == [8, 4, 4]
+
+
+def test_weighted_rank_loss_of_heavy_rank_sim():
+    # losing the 2x rank: the remaining uniform survivors split evenly
+    ref = _reference("sim", weights=W)
+    rt, out, pol = _run_faulted(
+        "sim", [FaultSpec(5, kind="rank", rank=0)], weights=W)
+    assert np.array_equal(out, ref)
+    part = rt.parts[pol.data_parts["a"]]
+    assert part.weights == (0.0, 1.0, 1.0, 1.0)
+    assert part.regions[0].is_empty()
+
+
+def test_weighted_rank_loss_jax():
+    _need_devices(NPROC)
+    ref = _reference("jax", weights=W)
+    rt, out, _pol = _run_faulted(
+        "jax", [FaultSpec(4, kind="rank", rank=1)], weights=W)
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.elastic_shrinks == 1
+    assert rt.recovery_log[0]["live"] == [0, 2, 3]
+
+
+def test_weighted_transient_jax():
+    _need_devices(NPROC)
+    ref = _reference("jax", weights=W)
+    rt, out, _pol = _run_faulted("jax", [5], weights=W)
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.recoveries == 1
+
+
+def test_weighted_null_backend_counters():
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(NPROC, backend="null")
+        _a, _b, pd, steps = _build(rt, materialized=False, weights=W)
+        pol = RecoveryPolicy(
+            checkpoint=CheckpointManager(d), interval=2,
+            injector=FaultInjector([4, FaultSpec(7, kind="rank", rank=3)]),
+            data_parts={"a": pd, "b": pd})
+        rt.run_pipeline(steps, recovery=pol)
+    assert rt.planner.stats.recoveries == 2
+    assert rt.planner.stats.elastic_shrinks == 1
+    assert rt.recovery_log[0]["migration_bytes"] > 0
+    assert rt.parts[pol.data_parts["a"]].weights == (2.0, 1.0, 1.0, 0.0)
 
 
 # ---------------------------------------------------------------------

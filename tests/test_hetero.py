@@ -1,0 +1,705 @@
+"""Heterogeneous weighted partitions + measurement-driven rebalancing.
+
+Covers the whole weighted stack:
+
+  * `_weighted_splits` apportionment (largest remainder, zero weights,
+    validation) and its uniform == even bit-identity,
+  * weighted ROW/COL/BLOCK factories + adjacency on non-uniform
+    boundaries + planner parity against a MANUAL partition with the
+    SAME regions (the staircase/neighbor machinery must not care how
+    the boundaries were computed),
+  * the uniform-weights pure-refactor guarantee: comm_log and results
+    bit-identical with and without explicit uniform weights,
+  * DeviceProfile registry -> default runtime weights,
+  * `@device_kernel` per-architecture variants resolved by executor
+    device class (Parla-style `@specialized`), sim/jax dispatch +
+    bit-identical parity when variants agree,
+  * per-rank StragglerMonitor baselines (stable detection of a
+    persistently slow rank; scalar API unchanged),
+  * the Rebalancer trigger state machine and the full mid-pipeline
+    rebalance: injected per-rank slowdown -> repartition in comm_log,
+    audit record in recovery_log, values bit-identical to the
+    unrebalanced run.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import AccessSpec, Box, HDArrayRuntime
+from repro.core.partition import Partition, _even_splits, _weighted_splits
+from repro.executors import (DeviceProfile, DeviceProfileRegistry,
+                             device_kernel, kernel_put, resolve_kernel)
+from repro.ft.faults import StragglerMonitor
+from repro.ft.rebalance import Rebalancer, reweighted_partition
+
+FP = AccessSpec.of((0, -1), (0, 1), (-1, 0), (1, 0), (0, 0))
+ID = AccessSpec.of((0, 0))
+N = 16
+NPROC = 4
+
+
+def _need_devices(n):
+    import jax
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} host devices (XLA_FLAGS not applied?)")
+
+
+# ---------------------------------------------------------------------
+# weighted splits
+# ---------------------------------------------------------------------
+def test_weighted_splits_proportional():
+    assert _weighted_splits(100, [2, 1, 1]) == ((0, 50), (50, 75), (75, 100))
+    assert _weighted_splits(7, [1, 6]) == ((0, 1), (1, 7))
+
+
+def test_weighted_splits_uniform_is_even_bitwise():
+    # the floor-of-cumulative rule would give (2,3,2,3) chunks on
+    # extent=10/parts=4; the even rule gives (3,3,2,2).  Uniform
+    # weights MUST reproduce the even rule exactly.
+    for extent in (10, 16, 17, 101):
+        for parts in (1, 2, 3, 4, 7):
+            for w in (1.0, 0.25, 3.0):
+                assert (_weighted_splits(extent, [w] * parts)
+                        == _even_splits(extent, parts)), (extent, parts, w)
+
+
+def test_weighted_splits_cover_and_order():
+    splits = _weighted_splits(97, [5, 0.1, 2.4, 1.0, 0.5])
+    assert splits[0][0] == 0 and splits[-1][1] == 97
+    for (alo, ahi), (blo, bhi) in zip(splits, splits[1:]):
+        assert ahi == blo and alo <= ahi
+
+
+def test_weighted_splits_zero_weight_empty_chunk():
+    splits = _weighted_splits(10, [1, 0, 1])
+    assert splits == ((0, 5), (5, 5), (5, 10))
+
+
+def test_weighted_splits_validation():
+    with pytest.raises(ValueError):
+        _weighted_splits(10, [1, -1])
+    with pytest.raises(ValueError):
+        _weighted_splits(10, [0, 0])
+    with pytest.raises(ValueError):
+        _weighted_splits(10, [])
+    with pytest.raises(ValueError):
+        Partition.row(0, (10, 10), 4, weights=(1, 2))  # wrong arity
+
+
+# ---------------------------------------------------------------------
+# weighted factories + geometry
+# ---------------------------------------------------------------------
+def test_row_col_block_uniform_weights_identical_regions():
+    dom = (13, 11)
+    for make in (Partition.row, Partition.col):
+        assert (make(0, dom, 4).regions
+                == make(1, dom, 4, weights=(1, 1, 1, 1)).regions)
+    assert (Partition.block(0, dom, 4).regions
+            == Partition.block(1, dom, 4, weights=(2, 2, 2, 2)).regions)
+
+
+def test_weighted_row_regions_and_weights_recorded():
+    p = Partition.row(0, (100, 8), 3, weights=(2, 1, 1))
+    assert [r.bounds[0] for r in p.regions] == [(0, 50), (50, 75), (75, 100)]
+    assert p.weights == (2.0, 1.0, 1.0)
+    assert Partition.row(1, (100, 8), 3).weights is None
+
+
+def test_weighted_block_grid_axis_sums():
+    # 2x2 grid, row-major ranks: grid row 0 = ranks {0,1} (weight 6),
+    # grid row 1 = ranks {2,3} (weight 2); cols symmetric
+    p = Partition.block(0, (8, 8), 4, weights=(3, 3, 1, 1))
+    assert p.regions[0].bounds == ((0, 6), (0, 4))
+    assert p.regions[3].bounds == ((6, 8), (4, 8))
+
+
+def test_weighted_adjacency_non_uniform_boundaries():
+    p = Partition.row(0, (100, 8), 4, weights=(10, 1, 1, 10))
+    for a, b in ((0, 1), (1, 2), (2, 3)):
+        assert p.adjacent(a, b) and p.adjacent(b, a)
+    assert not p.adjacent(0, 2)
+    assert p.adjacent(0, 3, periodic=True)       # torus wrap
+    assert not p.adjacent(0, 3, periodic=False)
+
+
+def test_weighted_zero_weight_rank_planner_safe():
+    # a zero-weight rank gets an empty region; plans must not choke
+    rt = HDArrayRuntime(3)
+    a = rt.create("a", (12, 12))
+    pid = rt.partition_row((12, 12), weights=(1, 0, 1))
+    data = np.arange(144, dtype=np.float32).reshape(12, 12)
+    rt.write(a, data, pid)
+    rt.plan_only("k", pid, [a], uses={"a": ID}, defs={"a": ID})
+    assert np.array_equal(rt.read(a, pid), data)
+
+
+# ---------------------------------------------------------------------
+# planner parity: weighted boundaries == same regions spelled manually
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("weights", [(2, 1, 1, 1), (1, 3, 1, 2),
+                                     (5, 1, 1, 5)])
+def test_weighted_plan_parity_vs_manual(weights):
+    """The sGDEF/neighbor enumeration must produce the same plans for a
+    weighted partition and a manual partition with identical regions —
+    the split rule is invisible to the planner."""
+    def run(make_part):
+        rt = HDArrayRuntime(NPROC)
+        a = rt.create("a", (N, N))
+        b = rt.create("b", (N, N))
+        pd = rt.partition_row((N, N))
+        rng = np.random.default_rng(0)
+        rt.write(a, rng.standard_normal((N, N)).astype(np.float32), pd)
+        rt.write(b, np.zeros((N, N), np.float32), pd)
+        interior = Box.make((1, N - 1), (1, N - 1))
+        pw = make_part(rt, interior)
+        for _ in range(3):
+            rt.plan_only("jac", pw, [a, b], uses={"a": FP}, defs={"b": ID})
+            rt.plan_only("cp", pw, [a, b], uses={"b": ID}, defs={"a": ID})
+        return rt
+
+    wrt = run(lambda rt, box: rt.partition_row((N, N), region=box,
+                                               weights=weights))
+    regions = Partition.row(0, (N, N), NPROC,
+                            region=Box.make((1, N - 1), (1, N - 1)),
+                            weights=weights).regions
+    mrt = run(lambda rt, box: rt.partition_manual((N, N), regions))
+    assert [(name, b) for name, b, _k in wrt.comm_log[:2]] \
+        == [(name, b) for name, b, _k in mrt.comm_log[:2]]
+    assert [k for _n, _b, k in wrt.comm_log] \
+        == [k for _n, _b, k in mrt.comm_log]
+
+
+# ---------------------------------------------------------------------
+# pure-refactor guarantee: uniform weights change NOTHING
+# ---------------------------------------------------------------------
+@device_kernel
+def _jac(region, bufs):
+    (i0, i1), (j0, j1) = region.bounds
+    a = bufs["a"]
+    new = 0.25 * (a[i0 - 1:i1 - 1, j0:j1] + a[i0 + 1:i1 + 1, j0:j1]
+                  + a[i0:i1, j0 - 1:j1 - 1] + a[i0:i1, j0 + 1:j1 + 1])
+    return {"b": kernel_put(bufs["b"], (slice(i0, i1), slice(j0, j1)), new)}
+
+
+@device_kernel
+def _cp(region, bufs):
+    sl = region.to_slices()
+    return {"a": kernel_put(bufs["a"], sl, bufs["b"][sl])}
+
+
+def _pipeline(rt, weights=None, reps=5, materialized=True):
+    a = rt.create("a", (N, N))
+    b = rt.create("b", (N, N))
+    pd = rt.partition_row((N, N), weights=weights)
+    pw = rt.partition_row((N, N), region=Box.make((1, N - 1), (1, N - 1)),
+                          weights=weights)
+    data = np.random.default_rng(0).standard_normal((N, N)).astype(np.float32)
+    rt.write(a, data if materialized else None, pd)
+    rt.write(b, data if materialized else None, pd)
+    steps = []
+    for _ in range(reps):
+        steps.append(dict(kernel_name="jac", part_id=pw,
+                          kernel=_jac if materialized else None,
+                          arrays=[a, b], uses={"a": FP}, defs={"b": ID}))
+        steps.append(dict(kernel_name="cp", part_id=pw,
+                          kernel=_cp if materialized else None,
+                          arrays=[a, b], uses={"b": ID}, defs={"a": ID}))
+    return a, b, pd, steps
+
+
+@pytest.mark.parametrize("backend", ["sim", "null"])
+def test_uniform_weights_bit_identical_host(backend):
+    mat = backend != "null"
+    rt0 = HDArrayRuntime(NPROC, backend=backend)
+    a0, _b, _pd, steps = _pipeline(rt0, materialized=mat)
+    rt0.run_pipeline(steps)
+    rt1 = HDArrayRuntime(NPROC, backend=backend)
+    a1, _b, _pd, steps = _pipeline(rt1, weights=(1, 1, 1, 1),
+                                   materialized=mat)
+    rt1.run_pipeline(steps)
+    assert rt0.comm_log == rt1.comm_log
+    assert rt0.executor.bytes_moved == rt1.executor.bytes_moved
+    if mat:
+        assert np.array_equal(rt0.read_coherent(a0), rt1.read_coherent(a1))
+
+
+def test_uniform_weights_bit_identical_jax():
+    _need_devices(NPROC)
+    rt0 = HDArrayRuntime(NPROC, backend="jax")
+    a0, _b, _pd, steps = _pipeline(rt0)
+    rt0.run_pipeline(steps)
+    rt1 = HDArrayRuntime(NPROC, backend="jax")
+    a1, _b, _pd, steps = _pipeline(rt1, weights=(1, 1, 1, 1))
+    rt1.run_pipeline(steps)
+    assert rt0.comm_log == rt1.comm_log
+    assert np.array_equal(rt0.read_coherent(a0), rt1.read_coherent(a1))
+
+
+def test_weighted_pipeline_sim_jax_parity():
+    _need_devices(NPROC)
+    w = (3, 1, 1, 2)
+    outs = {}
+    for backend in ("sim", "jax"):
+        rt = HDArrayRuntime(NPROC, backend=backend)
+        a, _b, _pd, steps = _pipeline(rt, weights=w, reps=8)
+        rt.run_pipeline(steps)
+        outs[backend] = rt.read_coherent(a)
+    assert np.array_equal(outs["sim"], outs["jax"])
+
+
+# ---------------------------------------------------------------------
+# device profiles -> default weights
+# ---------------------------------------------------------------------
+def test_profile_registry_weights():
+    reg = DeviceProfileRegistry(4)
+    reg.declare(0, "gpu", flops=3.0)
+    reg.declare(1, "cpu", flops=1.0)
+    # ranks 2, 3 undeclared -> default flops=1.0
+    assert reg.weights() == (0.5, 1 / 6, 1 / 6, 1 / 6)
+    assert reg.profile(0).device_class == "gpu"
+    with pytest.raises(ValueError):
+        reg.declare(7, flops=1.0)
+    with pytest.raises(ValueError):
+        reg.declare(0, flops=0.0)
+
+
+def test_profile_registry_from_step_times():
+    # rank 1 took 2x as long on equal work -> half the throughput
+    reg = DeviceProfileRegistry.from_step_times([1.0, 2.0, 1.0, 1.0])
+    w = reg.weights()
+    assert w[1] == min(w) and abs(w[0] - 2 * w[1]) < 1e-12
+    # unmeasured rank gets the mean observed speed
+    reg2 = DeviceProfileRegistry.from_step_times([1.0, 0.0, 1.0])
+    assert reg2.weights() == pytest.approx((1 / 3, 1 / 3, 1 / 3))
+
+
+def test_runtime_profiles_feed_partition_defaults():
+    reg = DeviceProfileRegistry(4)
+    reg.declare(0, flops=3.0)
+    rt = HDArrayRuntime(4, profiles=reg)
+    pid = rt.partition_row((60, 8))
+    part = rt.parts[pid]
+    assert part.weights == pytest.approx((0.5, 1 / 6, 1 / 6, 1 / 6))
+    assert part.regions[0].bounds[0] == (0, 30)
+    # explicit weights override the profile default
+    pid2 = rt.partition_row((60, 8), weights=(1, 1, 1, 1))
+    assert rt.parts[pid2].regions[0].bounds[0] == (0, 15)
+    # a plain DeviceProfile sequence works too
+    rt2 = HDArrayRuntime(2, profiles=[DeviceProfile(0, flops=1.0),
+                                      DeviceProfile(1, flops=3.0)])
+    assert rt2.parts[rt2.partition_row((8, 8))].weights == (0.25, 0.75)
+
+
+# ---------------------------------------------------------------------
+# @device_kernel per-architecture variants
+# ---------------------------------------------------------------------
+def test_resolve_kernel_dispatch():
+    @device_kernel
+    def k(region, bufs):
+        return {}
+
+    @k.variant("tpu", "gpu")
+    def k_accel(region, bufs):
+        return {}
+
+    assert resolve_kernel(k, "sim") is k
+    assert resolve_kernel(k, "tpu") is k_accel
+    assert resolve_kernel(k, "gpu") is k_accel
+    assert resolve_kernel(k, None) is k
+    assert resolve_kernel(None, "tpu") is None
+    # variants are terminal and device-marked
+    assert k_accel.__hdarray_device__ and not k_accel.__hdarray_variants__
+    with pytest.raises(ValueError):
+        k.variant()
+
+
+def _make_marking_kernel():
+    """Default writes 1, the "sim" variant writes 2 — which executor
+    class ran is visible in the output."""
+    @device_kernel
+    def mark(region, bufs):
+        sl = region.to_slices()
+        return {"a": kernel_put(bufs["a"], sl,
+                                np.ones(region.shape(), np.float32))}
+
+    @mark.variant("sim")
+    def mark_sim(region, bufs):
+        sl = region.to_slices()
+        return {"a": kernel_put(bufs["a"], sl,
+                                2 * np.ones(region.shape(), np.float32))}
+
+    return mark
+
+
+def test_sim_executor_picks_sim_variant():
+    rt = HDArrayRuntime(NPROC)
+    a = rt.create("a", (N, N))
+    pd = rt.partition_row((N, N))
+    rt.write(a, np.zeros((N, N), np.float32), pd)
+    rt.apply_kernel("mark", pd, _make_marking_kernel(), [a],
+                    uses={"a": ID}, defs={"a": ID})
+    assert np.array_equal(rt.read_coherent(a),
+                          2 * np.ones((N, N), np.float32))
+
+
+def test_jax_executor_picks_platform_variant():
+    _need_devices(NPROC)
+    import jax
+
+    @device_kernel
+    def mark(region, bufs):
+        sl = region.to_slices()
+        return {"a": kernel_put(bufs["a"], sl, 1.0 * bufs["a"][sl] + 1.0)}
+
+    calls = []
+
+    @mark.variant(jax.default_backend())
+    def mark_native(region, bufs):
+        calls.append(region.bounds)
+        sl = region.to_slices()
+        return {"a": kernel_put(bufs["a"], sl, 1.0 * bufs["a"][sl] + 2.0)}
+
+    rt = HDArrayRuntime(NPROC, backend="jax")
+    a = rt.create("a", (N, N))
+    pd = rt.partition_row((N, N))
+    rt.write(a, np.zeros((N, N), np.float32), pd)
+    rt.apply_kernel("mark", pd, mark, [a], uses={"a": ID}, defs={"a": ID})
+    assert calls, "platform variant was never traced"
+    assert np.array_equal(rt.read_coherent(a),
+                          2 * np.ones((N, N), np.float32))
+    # sim resolves its own class, so the portable default runs there
+    rts = HDArrayRuntime(NPROC)
+    a2 = rts.create("a", (N, N))
+    rts.write(a2, np.zeros((N, N), np.float32), rts.partition_row((N, N)))
+    rts.apply_kernel("mark", rts.partition_row((N, N)), mark, [a2],
+                     uses={"a": ID}, defs={"a": ID})
+    assert np.array_equal(rts.read_coherent(a2),
+                          np.ones((N, N), np.float32))
+
+
+def test_equivalent_variants_stay_bit_identical_across_backends():
+    _need_devices(NPROC)
+    import jax
+
+    @device_kernel
+    def sweep(region, bufs):
+        (i0, i1), (j0, j1) = region.bounds
+        a = bufs["a"]
+        new = 0.25 * (a[i0 - 1:i1 - 1, j0:j1] + a[i0 + 1:i1 + 1, j0:j1]
+                      + a[i0:i1, j0 - 1:j1 - 1] + a[i0:i1, j0 + 1:j1 + 1])
+        return {"b": kernel_put(bufs["b"], (slice(i0, i1), slice(j0, j1)),
+                                new)}
+
+    @sweep.variant(jax.default_backend())
+    def sweep_native(region, bufs):
+        # same math, different spelling: sum-then-scale
+        (i0, i1), (j0, j1) = region.bounds
+        a = bufs["a"]
+        new = (a[i0 - 1:i1 - 1, j0:j1] + a[i0 + 1:i1 + 1, j0:j1]
+               + a[i0:i1, j0 - 1:j1 - 1] + a[i0:i1, j0 + 1:j1 + 1]) * 0.25
+        return {"b": kernel_put(bufs["b"], (slice(i0, i1), slice(j0, j1)),
+                                new)}
+
+    outs = {}
+    for backend in ("sim", "jax"):
+        rt = HDArrayRuntime(NPROC, backend=backend)
+        a = rt.create("a", (N, N))
+        b = rt.create("b", (N, N))
+        pd = rt.partition_row((N, N))
+        pw = rt.partition_row((N, N), region=Box.make((1, N - 1), (1, N - 1)))
+        data = np.random.default_rng(1).standard_normal(
+            (N, N)).astype(np.float32)
+        rt.write(a, data, pd)
+        rt.write(b, data, pd)
+        steps = [dict(kernel_name="jac", part_id=pw, kernel=sweep,
+                      arrays=[a, b], uses={"a": FP}, defs={"b": ID}),
+                 dict(kernel_name="cp", part_id=pw, kernel=_cp,
+                      arrays=[a, b], uses={"b": ID}, defs={"a": ID})] * 6
+        rt.run_pipeline(steps)
+        outs[backend] = rt.read_coherent(a)
+    assert np.array_equal(outs["sim"], outs["jax"])
+
+
+# ---------------------------------------------------------------------
+# per-rank straggler baselines
+# ---------------------------------------------------------------------
+def test_monitor_scalar_api_unchanged():
+    mon = StragglerMonitor(threshold=2.0, alpha=0.1, warmup=3)
+    for i in range(4):
+        assert not mon.observe(i, 1.0)
+    assert mon.observe(4, 10.0)          # past warmup, 10 > 2*1.0
+    assert mon.ewma == pytest.approx(1.0)  # straggler did not poison it
+
+
+def test_monitor_per_rank_persistent_straggler_stays_flagged():
+    """The satellite fix: with per-rank baselines a persistently slow
+    rank is flagged every step, forever — its own samples never raise
+    the bar it is judged against.  (The scalar EWMA alone would absorb
+    it: by ~step 9 the global average has drifted up past duration/
+    threshold and flagging stops.)"""
+    mon = StragglerMonitor(threshold=2.0, alpha=0.3, warmup=3,
+                           min_duration=1e-6)
+    flagged_steps = []
+    for i in range(20):
+        times = (0.010, 0.010, 0.010, 0.050)    # rank 3 always 5x slower
+        if mon.observe(i, max(times), rank_times=times):
+            flagged_steps.append(i)
+    # flagged at every step past warmup, not a transient burst
+    assert flagged_steps == list(range(mon.warmup, 20))
+    rank_events = [e for e in mon.events if e.rank == 3]
+    assert len(rank_events) == 20 - mon.warmup
+    assert all(e.rank == 3 for e in mon.events if e.rank is not None)
+    # per-rank baselines converged on each rank's own time
+    assert mon.rank_ewma[3] == pytest.approx(0.050, rel=1e-6)
+    assert mon.rank_ewma[0] == pytest.approx(0.010, rel=1e-6)
+    # the raw history is kept for the rebalancer / audit records
+    assert len(mon.rank_history) == 20
+
+
+def test_monitor_scalar_has_no_rank_attribution():
+    """Contrast case for the doc above: the scalar path sees only the
+    aggregate step time, so its events cannot name the culprit rank —
+    the attribution the recovery/rebalance machinery needs comes only
+    from the per-rank path."""
+    mon = StragglerMonitor(threshold=2.0, alpha=0.3, warmup=3)
+    for i in range(10):
+        mon.observe(i, 0.050 if i >= 5 else 0.010)
+    assert mon.events and all(e.rank is None for e in mon.events)
+    assert mon.rank_ewma == {} and mon.rank_history == []
+
+
+def test_monitor_min_duration_floors_noise():
+    mon = StragglerMonitor(threshold=2.0, warmup=1, min_duration=1e-3)
+    for i in range(10):
+        # microsecond-scale noise with huge relative divergence
+        assert not mon.observe(i, 4e-6, rank_times=(1e-6, 1e-6, 4e-6))
+    assert mon.events == []
+
+
+def test_monitor_ignores_idle_ranks():
+    mon = StragglerMonitor(threshold=2.0, warmup=1, min_duration=1e-6)
+    for i in range(6):
+        mon.observe(i, 0.04, rank_times=(0.010, 0.0, 0.040))  # rank 1 idle
+    assert all(e.rank in (None, 2) for e in mon.events)
+    assert 1 not in mon.rank_ewma
+
+
+# ---------------------------------------------------------------------
+# Rebalancer state machine
+# ---------------------------------------------------------------------
+def test_rebalancer_patience_and_trigger():
+    reb = Rebalancer(threshold=1.5, patience=3, min_duration=1e-6)
+    vols = (100, 100, 100, 100)
+    bal = (0.010, 0.010, 0.010, 0.010)
+    div = (0.040, 0.010, 0.010, 0.010)
+    assert not reb.observe(0, bal, vols)
+    assert not reb.observe(1, div, vols)
+    assert not reb.observe(2, div, vols)
+    assert reb.observe(3, div, vols)          # 3rd consecutive diverged
+    # a balanced step resets the streak
+    reb2 = Rebalancer(threshold=1.5, patience=3, min_duration=1e-6)
+    seq = [div, div, bal, div, div]
+    assert [reb2.observe(i, t, vols) for i, t in enumerate(seq)] \
+        == [False] * 5
+
+
+def test_rebalancer_target_weights_floor_and_fill():
+    reb = Rebalancer(min_weight=0.10, min_duration=1e-6)
+    vols = (100, 100, 100)
+    for i in range(3):
+        reb.observe(i, (0.001, 0.100, 0.001), vols)  # rank 1 is 100x slower
+    w = reb.target_weights(3)
+    assert sum(w) == pytest.approx(1.0)
+    assert min(w) >= 0.10 - 1e-12                    # floored, not starved
+    assert w[0] == w[2] and w[1] == min(w)
+    # a 4th, never-measured rank gets a neutral (mean) share
+    w4 = reb.target_weights(4)
+    assert sum(w4) == pytest.approx(1.0) and w4[3] > w4[1]
+
+
+def test_rebalancer_cooldown_and_max():
+    reb = Rebalancer(threshold=1.5, patience=1, cooldown=2,
+                     max_rebalances=1, min_duration=1e-6)
+    vols = (100, 100)
+    div = (0.040, 0.010)
+    assert reb.observe(0, div, vols)
+    reb.note_rebalanced(0)
+    # cooldown eats the next two diverged observations
+    assert not reb.observe(1, div, vols)
+    assert not reb.observe(2, div, vols)
+    # budget exhausted: never fires again
+    assert not reb.observe(3, div, vols)
+    assert reb.rebalances == 1
+
+
+def test_rebalancer_min_delta_suppresses_churn():
+    # times still diverge, but the target is pinned at the min_weight
+    # floor we already run on: firing again would churn the mesh for an
+    # identical layout — suppress, and let capture resume
+    reb = Rebalancer(threshold=1.5, patience=2, min_duration=1e-6,
+                     min_weight=0.2, min_delta=0.05)
+    vols = (20, 80)                       # rank 0 already at the floor
+    div = (0.200, 0.080)                  # ...and still 10x slower per item
+    w = (0.2, 0.8)
+    for i in range(6):
+        assert not reb.observe(i, div, vols, weights=w)
+    assert reb.allow_capture()
+
+
+def test_rebalancer_capture_gate():
+    reb = Rebalancer(threshold=1.5, patience=2, min_duration=1e-6)
+    vols = (100, 100)
+    assert not reb.allow_capture()                   # no evidence yet
+    reb.observe(0, (0.01, 0.01), vols)
+    reb.observe(1, (0.01, 0.01), vols)
+    assert reb.allow_capture()                       # balanced streak
+    reb.observe(2, (0.04, 0.01), vols)
+    assert not reb.allow_capture()                   # diverging again
+    # unmeasurable steps (fused backend) never hold capture hostage
+    reb2 = Rebalancer(patience=2)
+    reb2.observe(0, None, vols)
+    reb2.observe(1, None, vols)
+    assert reb2.allow_capture()
+
+
+# ---------------------------------------------------------------------
+# reweighted_partition
+# ---------------------------------------------------------------------
+def test_reweighted_partition_row_col_block():
+    rt = HDArrayRuntime(4)
+    w = (0.4, 0.2, 0.2, 0.2)
+    pid = rt.partition_row((40, 8), region=Box.make((2, 38), (0, 8)))
+    new = reweighted_partition(rt, pid, w)
+    part = rt.parts[new]
+    assert part.weights == w
+    # 0.4 of 36 rows = 14.4 -> 15 after largest-remainder apportionment
+    assert part.regions[0].bounds == ((2, 17), (0, 8))
+    assert part.regions[3].bounds[0][1] == 38            # same coverage
+    cid = rt.partition_col((8, 40))
+    assert rt.parts[reweighted_partition(rt, cid, w)].weights == w
+    bid = rt.partition_block((16, 16), grid=(2, 2))
+    npart = rt.parts[reweighted_partition(rt, bid, w)]
+    assert npart.ptype.value == "block" and npart.weights == w
+    man = rt.partition_manual((8, 8), rt.parts[pid].regions)
+    with pytest.raises(ValueError):
+        reweighted_partition(rt, man, w)
+
+
+# ---------------------------------------------------------------------
+# the full loop: injected slowdown -> mid-pipeline rebalance
+# ---------------------------------------------------------------------
+def _hetero_pipeline(rt, reps=12):
+    a, b, pd, steps = None, None, None, None
+    a = rt.create("a", (N, N))
+    b = rt.create("b", (N, N))
+    pd = rt.partition_row((N, N))
+    pw = rt.partition_row((N, N), region=Box.make((1, N - 1), (1, N - 1)))
+    data = np.random.default_rng(0).standard_normal((N, N)).astype(np.float32)
+    rt.write(a, data, pd)
+    rt.write(b, data, pd)
+    steps = []
+    for _ in range(reps):
+        steps.append(dict(kernel_name="jac", part_id=pw, kernel=_jac,
+                          arrays=[a, b], uses={"a": FP}, defs={"b": ID}))
+        steps.append(dict(kernel_name="cp", part_id=pw, kernel=_cp,
+                          arrays=[a, b], uses={"b": ID}, defs={"a": ID}))
+    return a, b, pd, steps
+
+
+def test_rebalance_fires_and_preserves_values():
+    # reference: same pipeline, no injected slowdown, no rebalancer
+    ref_rt = HDArrayRuntime(NPROC)
+    ref_a, _b, _pd, ref_steps = _hetero_pipeline(ref_rt)
+    ref_rt.run_pipeline(ref_steps)
+    ref = ref_rt.read_coherent(ref_a)
+
+    rt = HDArrayRuntime(NPROC)
+    a, _b, pd, steps = _hetero_pipeline(rt)
+    rt.executor.rank_cost = {0: 4e-5, 1: 1e-5, 2: 1e-5, 3: 1e-5}
+    reb = Rebalancer(threshold=1.5, patience=3, min_duration=1e-4,
+                     data_parts={"a": pd, "b": pd})
+    rt.run_pipeline(steps, rebalance=reb)
+
+    assert rt.planner.stats.rebalances >= 1
+    assert reb.rebalances == rt.planner.stats.rebalances
+    # the migration is an ordinary planned repartition, in comm_log
+    reparts = [e for e in rt.comm_log if e[0].startswith("__repartition_")]
+    assert reparts and any(e[1] > 0 for e in reparts)
+    # audit record with the per-rank divergence history
+    rec = [r for r in rt.recovery_log if r["kind"] == "rebalance"][0]
+    assert sum(rec["weights"]) == pytest.approx(1.0)
+    assert rec["weights"][0] == min(rec["weights"])  # slow rank shrank
+    assert rec["rank_times"] and rec["migration_bytes"] > 0
+    # PlannerStats carries the same per-rank history
+    assert rt.planner.stats.rank_step_times
+    # and the VALUES are untouched — rebalancing only moved work
+    assert np.array_equal(rt.read_coherent(a), ref)
+
+
+def test_rebalance_reduces_critical_path():
+    rt = HDArrayRuntime(NPROC)
+    _a, _b, pd, steps = _hetero_pipeline(rt, reps=15)
+    rt.executor.rank_cost = {0: 4e-5, 1: 1e-5, 2: 1e-5, 3: 1e-5}
+    reb = Rebalancer(threshold=1.3, patience=3, min_duration=1e-4,
+                     data_parts={"a": pd, "b": pd})
+    rt.run_pipeline(steps, rebalance=reb)
+    assert rt.planner.stats.rebalances >= 1
+    hist = rt.planner.stats.rank_step_times
+    fired_at = [r["step"] for r in rt.recovery_log
+                if r["kind"] == "rebalance"][0]
+    pre = [max(t) for s, t in hist if s <= fired_at]
+    post = [max(t) for s, t in hist if s > fired_at + 2 * reb.cooldown]
+    assert post, "no steady steps after the rebalance"
+    # the modeled critical path (slowest rank) must drop
+    assert min(post) < 0.8 * max(pre)
+
+
+def test_rebalance_plan_caches_bust_and_rewarm():
+    """After a rebalance the remaining steps use NEW part ids: the §4.2
+    caches must go cold exactly once and re-warm on the new geometry
+    (fresh plans first, cache hits after)."""
+    rt = HDArrayRuntime(NPROC)
+    _a, _b, pd, steps = _hetero_pipeline(rt, reps=15)
+    rt.executor.rank_cost = {0: 4e-5, 1: 1e-5, 2: 1e-5, 3: 1e-5}
+    reb = Rebalancer(threshold=1.5, patience=3, min_duration=1e-4,
+                     data_parts={"a": pd, "b": pd})
+    plans = rt.run_pipeline(steps, rebalance=reb)
+    assert rt.planner.stats.rebalances >= 1
+    # last steps run steady on the rebalanced layout: cached again
+    assert plans[-1].cached and plans[-2].cached
+    # and some step after the first rebalance planned fresh (cold cache)
+    fired_at = [r["step"] for r in rt.recovery_log
+                if r["kind"] == "rebalance"][0]
+    assert any(not p.cached for p in plans[fired_at + 1:])
+
+
+def test_rebalance_in_recovery_pipeline():
+    import tempfile
+
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.ft.faults import FaultInjector, RecoveryPolicy
+
+    ref_rt = HDArrayRuntime(NPROC)
+    ref_a, _b, _pd, ref_steps = _hetero_pipeline(ref_rt)
+    ref_rt.run_pipeline(ref_steps)
+    ref = ref_rt.read_coherent(ref_a)
+
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(NPROC)
+        a, _b, pd, steps = _hetero_pipeline(rt)
+        rt.executor.rank_cost = {0: 4e-5, 1: 1e-5, 2: 1e-5, 3: 1e-5}
+        pol = RecoveryPolicy(
+            checkpoint=CheckpointManager(d), interval=4,
+            injector=FaultInjector([5]),          # transient mid-run
+            data_parts={"a": pd, "b": pd},
+            rebalancer=Rebalancer(threshold=1.5, patience=3,
+                                  min_duration=1e-4))
+        rt.run_pipeline(steps, recovery=pol)
+        out = rt.read_coherent(a)
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.recoveries == 1
+    assert rt.planner.stats.rebalances >= 1
+    # the rebalancer adopted (and updated) the policy's layout mapping
+    assert pol.rebalancer.data_parts is pol.data_parts
+    assert pol.data_parts["a"] != pd
