@@ -17,11 +17,14 @@ measures what fault tolerance actually costs:
 Every faulted run is gated BIT-IDENTICAL against the uninterrupted
 reference on its backend (SystemExit on mismatch) — recovery must be
 invisible in the values: transient faults at first/middle/last step,
-a torn overlap-scheduled commit, and a permanent rank loss (planned
-shrink onto the surviving mesh).
+a torn overlap-scheduled commit, a permanent rank loss (planned shrink
+onto the surviving mesh), and a lose -> REJOIN round trip (elastic
+scale-up: the mesh grows back mid-run, with the rejoin latency and the
+grow-migration bytes reported from the ``rank_join`` recovery record).
 
 Quick mode (CI chaos smoke) runs the sim sweep + one jax scenario and
-checks the parity gates only; timings on CI are noise.
+checks the parity gates only (including the lose -> rejoin gate);
+timings on CI are noise.
 
 Run:  PYTHONPATH=src python -m benchmarks.fault_recovery [--quick]
       python -m benchmarks.run faults           # quick smoke (CI)
@@ -180,6 +183,27 @@ def main(quick: bool = False) -> dict:
         if rt.planner.stats.elastic_shrinks != 1 or not rec["migration_bytes"]:
             raise SystemExit(f"{backend} rank loss: no planned migration "
                              "recorded in recovery_log")
+        # lose -> rejoin: elastic scale-up back onto the full mesh
+        out, dt, rt = _run(backend, n, nproc, interval=2,
+                           specs=[FaultSpec(3, kind="rank", rank=2),
+                                  FaultSpec(7, kind="join", rank=2)])
+        _gate(f"{backend} lose->rejoin", out, refs[backend])
+        join = [r for r in rt.recovery_log if r["kind"] == "rank_join"][-1]
+        rows.append(dict(
+            backend=backend, scenario="lose_rejoin", fault_step=3,
+            interval=2, wall_s=dt, clean_wall_s=None,
+            base_wall_s=base_wall[backend],
+            recovery_latency_s=join["latency_s"],
+            ckpt_overhead_s=None,
+            steps_replayed=rt.planner.stats.steps_replayed,
+            recoveries=rt.planner.stats.recoveries,
+            restore_bytes=_restore_bytes(rt),
+            migration_bytes=join["migration_bytes"]))
+        if (rt.planner.stats.elastic_grows != 1
+                or not join["migration_bytes"]
+                or join["live"] != list(range(nproc))):
+            raise SystemExit(f"{backend} lose->rejoin: no planned grow "
+                             "migration recorded in recovery_log")
 
     print(f"\n{'backend':<8} {'scenario':<10} {'step':>4} {'intvl':>5} "
           f"{'replayed':>8} {'latency_ms':>10} {'restoreMB':>9} "
@@ -207,8 +231,14 @@ def main(quick: bool = False) -> dict:
                 [r["ckpt_overhead_s"] for r in sim_rows
                  if r["interval"] == i])))
         for i in intervals}
+    rejoin_rows = [r for r in rows if r["scenario"] == "lose_rejoin"]
     out = {"quick": quick, "n": n, "nproc": nproc,
-           "backends": backends, "intervals": by_interval}
+           "backends": backends, "intervals": by_interval,
+           "rejoin": {r["backend"]: dict(
+               rejoin_latency_s=r["recovery_latency_s"],
+               grow_migration_bytes=r["migration_bytes"],
+               steps_replayed=r["steps_replayed"])
+               for r in rejoin_rows}}
     os.makedirs("results", exist_ok=True)
     dest = ("results/fault_recovery_quick.json" if quick
             else "results/fault_recovery.json")

@@ -126,6 +126,7 @@ class PlannerStats:
     recoveries: int = 0          # fault -> restore -> resume cycles
     checkpoint_restores: int = 0  # per-array planned restore writes
     elastic_shrinks: int = 0     # permanent rank losses absorbed
+    elastic_grows: int = 0       # rank (re)joins absorbed (scale-up)
     straggler_events: int = 0    # StragglerMonitor threshold crossings
     steps_replayed: int = 0      # pipeline steps re-executed after restore
     # heterogeneity counters (weighted partitions + rebalancing)

@@ -92,6 +92,10 @@ class HDArrayRuntime:
         # fault-recovery audit trail: one record per recovery cycle
         # (see run_pipeline's `recovery=` path / docs/fault-tolerance.md)
         self.recovery_log: list = []
+        # capability weights ranks held before being lost — a rejoin
+        # restores them (0 -> w) instead of guessing (docs/fault-
+        # tolerance.md "Elastic scale-up", weight-restore semantics)
+        self._lost_weights: Dict[int, float] = {}
 
     # -- lifecycle ------------------------------------------------------
     def create(self, name: str, shape, dtype=np.float32) -> HDArray:
@@ -400,7 +404,8 @@ class HDArrayRuntime:
     def _run_pipeline_recoverable(self, steps: list, policy,
                                   rebalance=None) -> list:
         # ft imports stay function-local: repro.ft imports repro.core
-        from repro.ft.faults import RankLostFault, StepGuard
+        from repro.ft.faults import (RankJoinedEvent, RankLostFault,
+                                     StepGuard)
 
         if policy.checkpoint is None:
             raise ValueError("RecoveryPolicy.checkpoint is required: "
@@ -411,7 +416,9 @@ class HDArrayRuntime:
         n = len(steps)
         steps = [dict(st) for st in steps]   # part_ids rewritten on shrink
         plans: list = [None] * n
-        live = sorted(range(self.nproc))
+        initial_live = getattr(policy, "initial_live", None)
+        live = (sorted(int(p) for p in initial_live)
+                if initial_live is not None else sorted(range(self.nproc)))
         saved: set = set()
         reb = rebalance if rebalance is not None \
             else getattr(policy, "rebalancer", None)
@@ -429,6 +436,15 @@ class HDArrayRuntime:
                           backoff=policy.backoff, sleep=policy.sleep)
         i = 0
         while i < n:
+            # drain out-of-band joins (RecoveryPolicy.register_rank):
+            # a recovered rank re-registering grows the mesh back at
+            # the very next step boundary, automatically
+            pending = getattr(policy, "pending_joins", None)
+            if pending:
+                for r in list(pending):
+                    self._recover_rank_join(r, policy, steps, live,
+                                            rebalancer=reb, step=i)
+                pending.clear()
             if (policy.interval and i % policy.interval == 0
                     and i not in saved):
                 cm.save_runtime(i, self)
@@ -440,10 +456,24 @@ class HDArrayRuntime:
                         st, policy.injector, k))
             except RankLostFault as e:
                 restored = self._recover_rank_loss(e.rank, policy, steps,
-                                                   live)
+                                                   live, rebalancer=reb)
                 stats.recoveries += 1
                 stats.steps_replayed += i - restored
                 i = restored
+                continue
+            except RankJoinedEvent as e:
+                resume = i
+                if e.site == "commit":
+                    # the step tore mid-commit: discard it via the last
+                    # checkpoint first, then grow, then replay — values
+                    # stay bit-identical (partition-independent)
+                    restored, _state = restore_fn()
+                    stats.recoveries += 1
+                    stats.steps_replayed += i - restored
+                    resume = restored
+                self._recover_rank_join(e.rank, policy, steps, live,
+                                        rebalancer=reb, step=i)
+                i = resume
                 continue
             if replay is not None:
                 restored, _state = replay
@@ -464,7 +494,7 @@ class HDArrayRuntime:
                 volumes = tuple(r.volume() for r in part.regions)
                 if reb.observe(i, rank_times, volumes,
                                weights=part.weights):
-                    self._apply_rebalance(reb, steps, i + 1)
+                    self._apply_rebalance(reb, steps, i + 1, live=live)
             plans[i] = out
             i += 1
         return plans
@@ -480,7 +510,7 @@ class HDArrayRuntime:
             st["uses"], st["defs"], _fault_hook=hook, **st.get("kw", {}))
 
     def _recover_rank_loss(self, rank: int, policy, steps: list,
-                           live: list) -> int:
+                           live: list, rebalancer=None) -> int:
         """The planned-shrink path: mark the rank dead (coherence
         metadata + executor buffers), restore the checkpoint onto a
         staging layout over the survivors, repartition every array onto
@@ -495,6 +525,14 @@ class HDArrayRuntime:
             live.remove(rank)
         if not live:
             raise RuntimeError(f"rank {rank} lost and no survivors remain")
+        # remember the capability weight the rank carried so a later
+        # rejoin restores it (0 -> w) instead of guessing
+        for pid in (list((policy.data_parts or {}).values())
+                    + [st["part_id"] for st in steps]):
+            wts = self.parts[pid].weights
+            if wts is not None and wts[rank] > 0:
+                self._lost_weights[rank] = float(wts[rank])
+                break
         for arr in self.arrays.values():
             arr.mark_rank_lost(rank)
             self.executor.drop_rank(arr, rank)
@@ -532,6 +570,8 @@ class HDArrayRuntime:
             if pid not in remap:
                 remap[pid] = shrink_partition(self, pid, live)
             st["part_id"] = remap[pid]
+        if rebalancer is not None:
+            rebalancer.note_mesh_changed()
         self.planner.stats.elastic_shrinks += 1
         self.recovery_log.append({
             "kind": "rank_loss", "rank": rank,
@@ -541,19 +581,109 @@ class HDArrayRuntime:
                                 (len(live),), migration)})
         return cm_step
 
+    def _restored_weight(self, rank: int) -> Optional[float]:
+        """The capability weight a (re)joining rank comes back with:
+        the weight it carried before being lost, else the declared
+        DeviceProfileRegistry weight for a rank that was never lost
+        (genuine scale-up of a known device), else None —
+        ``grow_partition`` then defaults to the mean of the live
+        weights (neutral, like an unmeasured rank)."""
+        if rank in self._lost_weights:
+            return self._lost_weights[rank]
+        if self.profiles is not None:
+            try:
+                return float(self.profiles.weights()[rank])
+            except Exception:
+                return None
+        return None
+
+    def _recover_rank_join(self, rank: int, policy, steps: list,
+                           live: list, rebalancer=None,
+                           step: Optional[int] = None) -> None:
+        """The planned-GROW path, inverse of :meth:`_recover_rank_loss`:
+        a recovered (or newly added) rank enters the mesh mid-pipeline.
+        No checkpoint restore is needed — the survivors hold every
+        coherent byte — so the grow is pure planned migration: clear
+        the joiner's coherence metadata (its buffer is untrusted),
+        ``Executor.add_rank`` allocates the shard, ``grow_partition``
+        re-splits every canonical data layout with the rank's
+        capability weight restored (0 -> w), and a real ``repartition``
+        carries the migration bytes into ``comm_log``.  Remaining
+        steps' work partitions grow onto the joined mesh the same way."""
+        from repro.ft.faults import ElasticPlan, grow_partition
+
+        if rank in live:
+            # idempotent: a rank re-registering while already live is
+            # an audit event, not a mesh change
+            self.recovery_log.append({
+                "kind": "rank_join", "rank": rank, "step": step,
+                "live": list(live), "migration_bytes": 0, "noop": True,
+                "plan": None})
+            return
+        if not 0 <= rank < self.nproc:
+            raise ValueError(
+                f"rank {rank} cannot join a mesh of nproc={self.nproc} "
+                f"(the executor allocation is fixed at nproc; grow "
+                f"beyond it is not supported)")
+        t_grow = policy.clock() if hasattr(policy, "clock") else None
+        live.append(rank)
+        live.sort()
+        for arr in self.arrays.values():
+            arr.mark_rank_joined(rank)
+            self.executor.add_rank(arr, rank)
+        w = self._restored_weight(rank)
+        remap: Dict[int, int] = {}
+
+        def grown(pid: int) -> int:
+            if pid not in remap:
+                remap[pid] = grow_partition(self, pid, live, rank,
+                                            weight=w)
+            return remap[pid]
+
+        migration = 0
+        data_parts = dict(policy.data_parts or {})
+        for name, pid in data_parts.items():
+            tgt = grown(pid)
+            plan = self.repartition(self.arrays[name], pid, tgt)
+            migration += plan.bytes_total
+        if policy.data_parts is not None:
+            policy.data_parts.update(
+                {name: remap[pid] for name, pid in data_parts.items()})
+        for st in steps:
+            st["part_id"] = grown(st["part_id"])
+        if rebalancer is not None:
+            rebalancer.note_mesh_changed()
+        self._lost_weights.pop(rank, None)
+        self.planner.stats.elastic_grows += 1
+        self.recovery_log.append({
+            "kind": "rank_join", "rank": rank, "step": step,
+            "live": list(live), "migration_bytes": migration,
+            "latency_s": ((policy.clock() - t_grow)
+                          if t_grow is not None else None),
+            "plan": ElasticPlan(len(live) - 1, len(live),
+                                (len(live),), migration)})
+
     # -- measurement-driven rebalancing (ft/rebalance.py) -----------------
-    def _apply_rebalance(self, reb, steps: list, next_i: int) -> None:
+    def _apply_rebalance(self, reb, steps: list, next_i: int,
+                         live=None) -> None:
         """React to a Rebalancer trigger: rebuild every partition the
         remaining steps (and the rebalancer's ``data_parts`` arrays)
         use with the measured capability weights, migrate the data
         arrays through the ordinary planned ``repartition`` (coherence-
         gated, bytes in ``comm_log``), rewrite the remaining steps'
         part ids, and append the audit record — per-rank timing history
-        included — to ``recovery_log``."""
+        included — to ``recovery_log``.  ``live`` masks the target
+        weights to the current mesh: after an elastic shrink a dead
+        rank must get zero weight even though ``target_weights`` hands
+        never-measured ranks the mean speed."""
         from repro.ft.rebalance import reweighted_partition
 
         stats = self.planner.stats
         weights = reb.target_weights(self.nproc)
+        if live is not None:
+            mask = set(live)
+            weights = tuple(w if p in mask else 0.0
+                            for p, w in enumerate(weights))
         remap: Dict[int, int] = {}
 
         def new_pid(old: int) -> int:

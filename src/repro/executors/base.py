@@ -53,7 +53,13 @@ the four runtime actions the paper's library issues (§5):
   (device loss).  Backends discard/poison that buffer so nothing can
   silently read stale bytes; the recovery path (checkpoint restore +
   repartition, see docs/fault-tolerance.md) is responsible for never
-  planning a read of a dead rank.
+  planning a read of a dead rank,
+* ``add_rank`` — the elasticity hook, inverse of ``drop_rank``: rank p
+  (re)joined the mesh and needs a fresh buffer for an array.  Backends
+  (re)initialize that buffer EMPTY — whatever the device held before
+  the join is untrusted; the grow path (``grow_partition`` + planned
+  ``repartition``, see docs/fault-tolerance.md "Elastic scale-up")
+  populates it through ordinary planned traffic.
 
 ``holds_data`` (class attribute) tells the checkpoint layer whether
 this backend materializes real array bytes (sim/jax) or is metadata-
@@ -107,6 +113,8 @@ class Executor(Protocol):
     def allocate(self, arr: "HDArray") -> None: ...
 
     def drop_rank(self, arr: "HDArray", rank: int) -> None: ...
+
+    def add_rank(self, arr: "HDArray", rank: int) -> None: ...
 
     def free(self, arr: "HDArray") -> None: ...
 

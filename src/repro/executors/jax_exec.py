@@ -291,6 +291,19 @@ class JaxExecutor(SimExecutor):
             super().drop_rank(arr, rank)
             self._device_ok[arr.name] = False
 
+    def add_rank(self, arr: "HDArray", rank: int) -> None:
+        """Simulated device (re)join: pull current state down to the
+        host mirrors, zero the joining rank's mirror (its old resident
+        bytes are untrusted), and invalidate the resident copy — the
+        grow repartition's planned messages hand it real sections and
+        the next sync_device re-stages the stacked array.  The jax mesh
+        itself is fixed at nproc, so a join within the original
+        allocation is purely a buffer/residency event."""
+        with self._lock:
+            self.sync_host(arr)
+            super().add_rank(arr, rank)
+            self._device_ok[arr.name] = False
+
     # -- controller I/O (host-mirror paths) -----------------------------
     def write(self, arr: "HDArray", data: np.ndarray,
               per_device: Sequence["SectionSet"]) -> None:

@@ -32,6 +32,11 @@ class NullExecutor(SimExecutor):
     def allocate(self, arr: "HDArray") -> None:
         self.buffers[arr.name] = None
 
+    def add_rank(self, arr: "HDArray", rank: int) -> None:
+        # metadata-only: a join changes layouts and byte accounting
+        # (the grow repartition), never storage
+        pass
+
     def write(self, arr, data, per_device) -> None:
         pass
 

@@ -73,6 +73,16 @@ class SimExecutor:
         buf = bufs[rank]
         buf[...] = np.nan if np.issubdtype(buf.dtype, np.floating) else 0
 
+    def add_rank(self, arr: "HDArray", rank: int) -> None:
+        """Device `rank` (re)joined the mesh: give it a fresh zeroed
+        buffer for `arr`.  Whatever it held before (a poisoned pre-loss
+        buffer, or nothing) is NOT trusted — the rank gains coherent
+        sections only through planned traffic (the grow repartition)."""
+        bufs = self.buffers.get(arr.name)
+        if bufs is None:
+            return
+        bufs[rank] = np.zeros(arr.shape, dtype=arr.dtype)
+
     # -- data movement --------------------------------------------------
     def write(self, arr: "HDArray", data: np.ndarray,
               per_device: Sequence["SectionSet"]) -> None:

@@ -30,16 +30,24 @@ Components:
     signal :mod:`repro.ft.rebalance` turns into new partition weights.
   * RecoveryPolicy — everything run_pipeline needs to survive faults:
     the CheckpointManager + interval, the injector/monitor hooks, and
-    the retry/backoff knobs.
+    the retry/backoff knobs.  ``register_rank`` queues a recovered or
+    newly added rank; the runtime grows the mesh back at the next step
+    boundary.
+  * RankJoinedEvent — the scale-UP signal, symmetric to RankLostFault:
+    a recovered (or brand-new) rank re-enters the mesh mid-pipeline.
+    Not a fault — a planned control-flow event the runtime answers
+    with ``Executor.add_rank`` + a grow repartition.
   * ElasticPlan / plan_elastic_rescale — given a lost/gained device
     set, the new mesh shape + the HDArray migration volume (planned,
     metadata-only).
-  * shrink_partition / inherit_partition / survivor_partition — the
-    partition algebra of a mesh shrink: redistribute a partition's
-    coverage over the surviving ranks (the repartition target), or let
-    a successor rank inherit a dead rank's region (the restore
-    staging layout, so the follow-up repartition is a real planned
-    rebalance).
+  * shrink_partition / inherit_partition / survivor_partition /
+    grow_partition — the partition algebra of mesh elasticity:
+    redistribute a partition's coverage over the surviving ranks (the
+    shrink repartition target), let a successor rank inherit a dead
+    rank's region (the restore staging layout, so the follow-up
+    repartition is a real planned rebalance), or re-split the coverage
+    over a GROWN rank set with the joining rank's capability weight
+    restored (the scale-up repartition target).
 """
 from __future__ import annotations
 
@@ -76,15 +84,33 @@ class RankLostFault(RuntimeError):
         self.rank = rank
 
 
+class RankJoinedEvent(Exception):
+    """A rank (re)joined the device pool: a recovered rank re-registers
+    or a new device is added mid-run.  NOT a fault — a planned
+    control-flow signal, raised through the same injection sites as
+    faults so elasticity tests can place a join at a step boundary
+    (``site="step"``) or mid-commit (``site="commit"``, where the torn
+    step must first be discarded via checkpoint restore).  The runtime
+    answers with the grow path: ``Executor.add_rank`` allocates the
+    shard, :func:`grow_partition` re-splits every layout over the grown
+    mesh, and a planned ``repartition`` migrates the bytes."""
+
+    def __init__(self, rank: int, site: str = "step",
+                 msg: Optional[str] = None):
+        super().__init__(msg or f"rank {rank} joined ({site})")
+        self.rank = rank
+        self.site = site
+
+
 # -- deterministic fault injection --------------------------------------
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
-    """One planned fault: fire `times` times when execution reaches
-    pipeline step `step` at injection site `site`."""
+    """One planned fault (or elasticity event): fire `times` times when
+    execution reaches pipeline step `step` at injection site `site`."""
     step: int
     site: str = "step"          # "step" (before execution) | "commit"
-    kind: str = "transient"     # "transient" | "rank"
-    rank: int = 0               # the rank that dies (kind="rank")
+    kind: str = "transient"     # "transient" | "rank" | "join"
+    rank: int = 0               # the rank that dies/joins (kind="rank"/"join")
     times: int = 1
 
 
@@ -121,6 +147,10 @@ class FaultInjector:
                     raise RankLostFault(
                         sp.rank, f"injected loss of rank {sp.rank} at step "
                                  f"{step} ({site})")
+                if sp.kind == "join":
+                    raise RankJoinedEvent(
+                        sp.rank, site, f"injected join of rank {sp.rank} "
+                                       f"at step {step} ({site})")
                 raise TransientFault(f"injected fault at step {step} ({site})")
 
 
@@ -258,7 +288,15 @@ class RecoveryPolicy:
     ``data_parts`` (array name -> partition id) names each array's
     canonical data layout so a mesh shrink can stage restores on the
     inherit layout and rebalance with a planned repartition; ``clock``
-    and ``sleep`` are injectable for deterministic tests."""
+    and ``sleep`` are injectable for deterministic tests.
+
+    Elasticity: ``initial_live`` names the ranks that actually carry
+    data/work at pipeline start (default: all of them) — a mesh born
+    smaller than ``nproc`` can later GROW onto the idle ranks.
+    :meth:`register_rank` is the scale-up entry point: a recovered
+    rank re-registering (or a fresh rank being added) lands in
+    ``pending_joins`` and the runtime grows the mesh back at the next
+    step boundary, automatically."""
     checkpoint: Optional["CheckpointManager"] = None
     interval: int = 1
     injector: Optional[FaultInjector] = None
@@ -272,6 +310,18 @@ class RecoveryPolicy:
     # consumes the same per-rank timings the monitor sees and triggers
     # a mid-pipeline repartition when they diverge persistently
     rebalancer: Optional["Rebalancer"] = None
+    # ranks that hold data/work at pipeline start (None: all ranks)
+    initial_live: Optional[Sequence[int]] = None
+    # ranks queued for a grow at the next step boundary (register_rank)
+    pending_joins: List[int] = dataclasses.field(default_factory=list)
+
+    def register_rank(self, rank: int) -> None:
+        """A recovered/added rank announces itself.  The runtime drains
+        ``pending_joins`` at the next step boundary and grows the mesh
+        (Executor.add_rank + grow_partition + planned repartition) —
+        no caller-side orchestration needed."""
+        if rank not in self.pending_joins:
+            self.pending_joins.append(rank)
 
 
 # -- partition algebra of a mesh shrink ----------------------------------
@@ -383,6 +433,56 @@ def survivor_partition(rt: "HDArrayRuntime", shape: Sequence[int],
         b[0] = splits[j]
         regions[p] = Box(tuple(b))
     return rt.partition_manual(shape, regions)
+
+
+def grow_partition(rt: "HDArrayRuntime", part_id: int,
+                   live: Sequence[int], rank: int,
+                   weight: Optional[float] = None) -> int:
+    """The repartition TARGET of a mesh grow — the inverse of
+    :func:`shrink_partition`: re-split partition ``part_id``'s coverage
+    over ``live`` ∪ {``rank``}, restoring the joining rank's capability
+    weight (0 → ``weight``).  The runtime resolves ``weight`` from the
+    pre-loss record or the :class:`DeviceProfileRegistry`; when neither
+    knows the rank (a brand-new device), the mean of the live weights
+    is used — neutral, like ``Rebalancer.target_weights`` for
+    never-measured ranks.
+
+    Factory-typed partitions (ROW/COL/BLOCK — e.g. the plain scale-up
+    of a rank that was never lost, still sitting on its zero-weight
+    factory layout) re-run their own factory via
+    :func:`repro.ft.rebalance.reweighted_partition`; MANUAL layouts
+    (the post-shrink state) re-split their coverage box along dim 0,
+    symmetric to the shrink.  Returns the new partition id."""
+    from repro.core.partition import PartType
+    from repro.ft.rebalance import reweighted_partition
+
+    part = rt.parts[part_id]
+    live = sorted(set(live) | {rank})
+    wvec = None
+    if part.weights is not None:
+        wvec = list(part.weights)
+        if not wvec[rank] > 0:
+            if weight is None:
+                alive = [wvec[p] for p in live if wvec[p] > 0]
+                weight = (sum(alive) / len(alive)) if alive else 1.0
+            wvec[rank] = float(weight)
+        live_set = set(live)
+        wvec = [wvec[p] if p in live_set else 0.0
+                for p in range(part.nproc)]
+    if part.ptype is not PartType.MANUAL and wvec is not None:
+        return reweighted_partition(rt, part_id, wvec)
+    bbox = coverage_box(part.regions)
+    nd = len(bbox.bounds)
+    lo0, hi0 = bbox.bounds[0]
+    w = [wvec[p] for p in live] if wvec is not None else None
+    splits = (_weighted_splits(hi0 - lo0, w) if w is not None
+              else _even_splits(hi0 - lo0, len(live)))
+    regions = [_empty_box(nd)] * part.nproc
+    for j, p in enumerate(live):
+        b = list(bbox.bounds)
+        b[0] = (lo0 + splits[j][0], lo0 + splits[j][1])
+        regions[p] = Box(tuple(b))
+    return rt.partition_manual(part.domain, regions, weights=wvec)
 
 
 # -- elasticity accounting ----------------------------------------------

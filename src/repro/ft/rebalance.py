@@ -176,6 +176,19 @@ class Rebalancer:
         self._balanced = 0
         self._cooldown_left = self.cooldown
 
+    def note_mesh_changed(self) -> None:
+        """The mesh shrank or grew (elastic shrink / scale-up): the
+        per-rank speed estimates describe the OLD device set — a rank
+        that just joined has none, a rank that died must not keep one
+        (``target_weights`` would hand a dead rank the mean speed), and
+        survivors' speeds shift with the migrated working set.  Start
+        the grown/shrunk mesh as a fresh EWMA baseline, under the usual
+        post-change cooldown."""
+        self.speed_ewma.clear()
+        self._diverged = 0
+        self._balanced = 0
+        self._cooldown_left = self.cooldown
+
 
 def reweighted_partition(rt: "HDArrayRuntime", part_id: int,
                          weights: Sequence[float]) -> int:

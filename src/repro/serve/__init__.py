@@ -1,5 +1,5 @@
-from .engine import (ServeConfig, Engine, make_prefill_step,
-                     make_decode_step, sample_tokens)
+from .engine import (ServeConfig, Engine, RecoveryEngine, SlotsExhausted,
+                     make_prefill_step, make_decode_step, sample_tokens)
 
-__all__ = ["ServeConfig", "Engine", "make_prefill_step", "make_decode_step",
-           "sample_tokens"]
+__all__ = ["ServeConfig", "Engine", "RecoveryEngine", "SlotsExhausted",
+           "make_prefill_step", "make_decode_step", "sample_tokens"]

@@ -9,9 +9,20 @@ by `examples/serve_lm.py`:
     ragged (`pos: (B,)`), so new requests join mid-flight without
     flushing the batch (the decode step is shape-stable => one compiled
     executable),
-  * prefill writes a new request's KV into its slot at pos 0; decode
-    advances every live slot by one token per call,
-  * sampling: greedy / temperature / top-k, all in fp32 logits.
+  * prefill writes a new request's KV into its slot at pos 0 with a
+    snapshot + scatter, so every OTHER live slot's cache is untouched
+    (prefill traces the whole pool batch; only the admitted slot's
+    rows are kept),
+  * sampling: greedy / temperature / top-k, all in fp32 logits,
+  * backpressure: with every slot busy, requests queue up to
+    ``queue_depth`` (FIFO, drained on ``finish``) and beyond that
+    raise the typed :class:`SlotsExhausted`,
+  * failover: :class:`RecoveryEngine` backs the slot KV caches with
+    HDArrays partitioned over serving instances (ranks), so an
+    instance loss mid-request is the ft layer's planned shrink — KV
+    migrates to survivors via ``repartition``, the checkpointed window
+    replays, and in-flight requests stream bit-identical tokens; a
+    later rejoin is the planned grow.
 
 Cache family is dictated by the arch (full KV / MLA latent / ring
 window / recurrent state) — `bundle.init_cache` hides that behind one
@@ -19,12 +30,22 @@ pytree, and `repro.train.sharding.cache_shardings` shards it.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import tempfile
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class SlotsExhausted(RuntimeError):
+    """``add_request`` with every slot busy AND the admission queue
+    full (or disabled, the ``queue_depth=0`` default): real
+    backpressure, distinct from a transient queue wait.  Subclasses
+    RuntimeError so seed-era callers that caught the bare error keep
+    working."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +54,7 @@ class ServeConfig:
     slots: int = 8              # concurrent sequences
     temperature: float = 0.0    # 0 => greedy
     top_k: int = 0              # 0 => full softmax
+    queue_depth: int = 0        # admission queue size (0 => reject)
 
 
 def sample_tokens(logits, key, temperature: float = 0.0, top_k: int = 0):
@@ -82,15 +104,50 @@ class Engine:
         self.slot_pos = np.zeros(scfg.slots, np.int32)      # next write pos
         self.slot_live = np.zeros(scfg.slots, bool)
         self.slot_tokens: List[List[int]] = [[] for _ in range(scfg.slots)]
+        # admission queue (backpressure): FIFO of deferred requests,
+        # drained into freed slots on finish(); `admitted` maps each
+        # drained ticket (negative id) to the slot it landed in
+        self.queue: collections.deque = collections.deque()
+        self.admitted: Dict[int, int] = {}
+        self._next_ticket = -1
+        # which axis of each cache leaf is the slot (batch) dim: probed
+        # by re-initializing the cache with one extra slot and diffing
+        # shapes (family-agnostic — full KV, MLA latent, recurrent all
+        # place B differently); -1 marks a slot-invariant leaf
+        probe = bundle.init_cache(scfg.slots + 1, scfg.max_seq)
+        self._slot_axis = jax.tree.map(
+            lambda c, p: next((d for d, (s0, s1)
+                               in enumerate(zip(c.shape, p.shape))
+                               if s0 != s1), -1),
+            self.cache, probe)
+        del probe
 
     # ------------------------------------------------------------------
     def add_request(self, prompt_tokens: np.ndarray,
                     extra_inputs: Optional[Dict[str, Any]] = None) -> int:
-        """Prefill `prompt_tokens` into a free slot; returns slot id."""
+        """Prefill `prompt_tokens` into a free slot; returns the slot
+        id (>= 0).  With every slot busy the request queues (up to
+        ``queue_depth``) and a NEGATIVE ticket id returns instead —
+        ``finish`` drains the queue into freed slots and records
+        ticket -> slot in :attr:`admitted`.  Queue full (or disabled)
+        raises :class:`SlotsExhausted`."""
         free = np.flatnonzero(~self.slot_live)
         if free.size == 0:
-            raise RuntimeError("no free slots")
-        sid = int(free[0])
+            if len(self.queue) < self.scfg.queue_depth:
+                ticket = self._next_ticket
+                self._next_ticket -= 1
+                self.queue.append((ticket, np.asarray(prompt_tokens),
+                                   extra_inputs))
+                return ticket
+            raise SlotsExhausted(
+                f"no free slots ({self.scfg.slots} busy) and the "
+                f"admission queue is full "
+                f"({len(self.queue)}/{self.scfg.queue_depth})")
+        return self._admit(int(free[0]), np.asarray(prompt_tokens),
+                           extra_inputs)
+
+    def _admit(self, sid: int, prompt_tokens: np.ndarray,
+               extra_inputs: Optional[Dict[str, Any]]) -> int:
         T = len(prompt_tokens)
         B = self.scfg.slots
         toks = np.zeros((B, T), np.int32)
@@ -98,14 +155,16 @@ class Engine:
         batch = {"tokens": jnp.asarray(toks)}
         if extra_inputs:
             batch.update(extra_inputs)
-        # prefill the WHOLE pool batch but only slot sid starts at 0; other
-        # slots' caches are overwritten at their current pos then restored
-        # by virtue of pos bookkeeping (single-slot prefill keeps it simple:
-        # snapshot + scatter would be the multi-slot upgrade).
+        # snapshot + scatter: prefill traces the WHOLE pool batch, so
+        # it rewrites every slot's cache at the prompt positions (and
+        # advances every slot's pos).  Keep only the admitted slot's
+        # rows; every other live slot's cache is bit-identical to its
+        # pre-prefill snapshot.
+        snapshot = jax.tree.map(lambda x: x, self.cache)
         for g in self._cache_groups():
             g["pos"] = jnp.where(jnp.arange(B) == sid, 0, g["pos"])
         logits, cache = self._prefill(self.params, batch, self.cache)
-        self.cache = cache
+        self.cache = self._scatter_slot(snapshot, cache, sid)
         self.slot_pos[sid] = T
         self.slot_live[sid] = True
         self.slot_tokens[sid] = list(map(int, prompt_tokens))
@@ -113,6 +172,22 @@ class Engine:
         tok = self._sample(logits)
         self.slot_tokens[sid].append(int(tok[sid, 0]))
         return sid
+
+    def _scatter_slot(self, old, new, sid: int):
+        """Merge two cache pytrees: slot `sid`'s rows from `new`,
+        every other slot's from `old` (slot-invariant leaves keep the
+        snapshot)."""
+        B = self.scfg.slots
+
+        def pick(o, n, ax):
+            if ax < 0:
+                return o
+            shape = [1] * n.ndim
+            shape[ax] = B
+            mask = jnp.arange(B).reshape(shape) == sid
+            return jnp.where(mask, n, o)
+
+        return jax.tree.map(pick, old, new, self._slot_axis)
 
     def step(self) -> Dict[int, int]:
         """One decode step for all live slots; returns {slot: token}."""
@@ -136,6 +211,11 @@ class Engine:
         self.slot_live[sid] = False
         toks, self.slot_tokens[sid] = self.slot_tokens[sid], []
         self.slot_pos[sid] = 0
+        # drain the admission queue into the freed slot (FIFO)
+        if self.queue:
+            ticket, prompt, extra = self.queue.popleft()
+            slot = int(np.flatnonzero(~self.slot_live)[0])
+            self.admitted[ticket] = self._admit(slot, prompt, extra)
         return toks
 
     def generate(self, prompt_tokens: np.ndarray, n_tokens: int,
@@ -156,3 +236,266 @@ class Engine:
             return [self.cache]
         return [g for g in self.cache.values()
                 if isinstance(g, dict) and "pos" in g]
+
+
+# ----------------------------------------------------------------------
+class RecoveryEngine:
+    """Failure-aware serving: an :class:`Engine` whose slot KV caches
+    are backed by HDArrays partitioned over serving ``instances``
+    (ranks of an :class:`~repro.core.runtime.HDArrayRuntime`) — rank p
+    owns the cache sections of its share of the slot pool, the way a
+    production stack spreads requests over replicas.
+
+    Every cache leaf mirrors into one HDArray (slot axis moved to
+    dim 0, non-native dtypes bit-viewed); a ``CheckpointManager``
+    snapshots the HDArrays + the host slot table after each admit and
+    every ``checkpoint_interval`` decode steps.  ``fail_instance(rank)``
+    is the ft layer's planned shrink applied to serving: mark the rank
+    lost, restore the checkpoint onto the survivors' staging layout,
+    ``repartition`` the live slots' caches onto the shrunken layout
+    (migration bytes in ``rt.comm_log``), then silently replay the
+    decode steps since the snapshot — greedy decoding makes the replay,
+    and therefore every in-flight token stream, bit-identical to an
+    uninterrupted run.  ``rejoin_instance(rank)`` is the planned grow:
+    ``Executor.add_rank`` + ``grow_partition`` + a migrating
+    ``repartition``, no replay needed (the survivors hold every
+    coherent byte).  The audit records land in ``rt.recovery_log`` as
+    ``kind="instance_loss"`` / ``"instance_join"``.
+    """
+
+    def __init__(self, bundle, params, scfg: ServeConfig,
+                 instances: int = 2, seed: int = 0,
+                 checkpoint_interval: int = 2,
+                 ckpt_dir: Optional[str] = None, backend: str = "sim"):
+        from repro.ckpt.checkpoint import CheckpointManager
+        from repro.core import HDArrayRuntime
+
+        self.engine = Engine(bundle, params, scfg, seed)
+        self.scfg = scfg
+        self.instances = instances
+        self.rt = HDArrayRuntime(instances, backend=backend)
+        self.live: List[int] = list(range(instances))
+        self._tmp = (tempfile.TemporaryDirectory()
+                     if ckpt_dir is None else None)
+        self.cm = CheckpointManager(ckpt_dir or self._tmp.name)
+        self.checkpoint_interval = max(1, int(checkpoint_interval))
+        self.recovery_log = self.rt.recovery_log
+        # one HDArray per slot-carrying cache leaf, row-partitioned
+        # (slot dim 0) over the instances
+        leaves, self._treedef = jax.tree_util.tree_flatten_with_path(
+            self.engine.cache)
+        axes = jax.tree_util.tree_leaves(self.engine._slot_axis)
+        self._leaves: List[Tuple[str, int, Any]] = []
+        self._parts: Dict[str, int] = {}
+        for (path, leaf), ax in zip(leaves, axes):
+            name = "kv" + jax.tree_util.keystr(path)
+            if ax < 0:
+                self._leaves.append((name, -1, None))
+                continue
+            host = np.asarray(leaf)
+            shape = (host.shape[ax],) + tuple(
+                s for d, s in enumerate(host.shape) if d != ax)
+            view = host.dtype if _is_native(host.dtype) else _bit_view(host)
+            self.rt.create(name, shape, dtype=view)
+            self._parts[name] = self.rt.partition_row(shape)
+            self._leaves.append((name, int(ax), host.dtype))
+        self._decode_count = 0
+        self._ckpt_step = 0
+        self._ckpt_decode = 0
+        self._host_snap = None
+        self._checkpoint()
+
+    # -- engine API (checkpointed) -------------------------------------
+    def add_request(self, prompt_tokens, extra_inputs=None) -> int:
+        sid = self.engine.add_request(np.asarray(prompt_tokens),
+                                      extra_inputs)
+        # checkpoint right after the admit so the replay window after
+        # a failure only ever contains decode steps
+        self._checkpoint()
+        return sid
+
+    def step(self) -> Dict[int, int]:
+        out = self.engine.step()
+        self._decode_count += 1
+        self._mirror()
+        if self._decode_count - self._ckpt_decode >= self.checkpoint_interval:
+            self._checkpoint()
+        return out
+
+    def finish(self, sid: int) -> List[int]:
+        out = self.engine.finish(sid)
+        self._checkpoint()
+        return out
+
+    def generate(self, prompt_tokens, n_tokens: int,
+                 extra_inputs=None) -> List[int]:
+        sid = self.add_request(np.asarray(prompt_tokens), extra_inputs)
+        for _ in range(n_tokens - 1):
+            self.step()
+        return self.finish(sid)
+
+    # -- elasticity ----------------------------------------------------
+    def fail_instance(self, rank: int) -> None:
+        """Instance `rank` died mid-serving.  Planned shrink + replay:
+        caller-visible token streams continue bit-identically."""
+        from repro.ft.faults import (ElasticPlan, inherit_partition,
+                                     shrink_partition, survivor_partition)
+
+        if rank not in self.live:
+            raise ValueError(f"instance {rank} is not live ({self.live})")
+        self.live.remove(rank)
+        if not self.live:
+            raise RuntimeError(f"instance {rank} lost and no survivors "
+                               f"remain")
+        for arr in self.rt.arrays.values():
+            arr.mark_rank_lost(rank)
+            self.rt.executor.drop_rank(arr, rank)
+        staging: Dict[str, int] = {}
+        targets: Dict[str, int] = {}
+        for name, arr in self.rt.arrays.items():
+            pid = inherit_partition(self.rt, self._parts[name], self.live)
+            if pid is None:
+                pid = survivor_partition(self.rt, arr.shape, self.live)
+            staging[name] = pid
+            targets[name] = shrink_partition(self.rt, self._parts[name],
+                                             self.live)
+        self.cm.restore_runtime(self.rt, parts=staging, live=self.live)
+        migration = 0
+        for name, arr in self.rt.arrays.items():
+            if targets[name] != staging[name]:
+                plan = self.rt.repartition(arr, staging[name],
+                                           targets[name])
+                migration += plan.bytes_total
+        self._parts.update(targets)
+        # rebuild the engine at the checkpoint, then silently replay —
+        # greedy decode regenerates the exact in-flight tokens
+        replay = self._decode_count - self._ckpt_decode
+        slots_live = int(self.engine.slot_live.sum())
+        self._restore_host(self._host_snap)
+        self.engine.cache = self._cache_from_hdarrays()
+        self._decode_count = self._ckpt_decode
+        for _ in range(replay):
+            self.engine.step()
+            self._decode_count += 1
+            self._mirror()
+        self.rt.planner.stats.elastic_shrinks += 1
+        self.rt.recovery_log.append({
+            "kind": "instance_loss", "rank": rank, "live": list(self.live),
+            "migration_bytes": migration, "steps_replayed": replay,
+            "slots_live": slots_live,
+            "plan": ElasticPlan(len(self.live) + 1, len(self.live),
+                                (len(self.live),), migration)})
+
+    def rejoin_instance(self, rank: int) -> None:
+        """Instance `rank` (re)joined: planned grow — add_rank +
+        grow_partition + a migrating repartition.  No replay needed;
+        the survivors hold every coherent byte."""
+        from repro.ft.faults import ElasticPlan, grow_partition
+
+        if rank in self.live:
+            self.rt.recovery_log.append({
+                "kind": "instance_join", "rank": rank,
+                "live": list(self.live), "migration_bytes": 0,
+                "noop": True, "plan": None})
+            return
+        self.live.append(rank)
+        self.live.sort()
+        for arr in self.rt.arrays.values():
+            arr.mark_rank_joined(rank)
+            self.rt.executor.add_rank(arr, rank)
+        migration = 0
+        for name, arr in self.rt.arrays.items():
+            tgt = grow_partition(self.rt, self._parts[name], self.live,
+                                 rank)
+            plan = self.rt.repartition(arr, self._parts[name], tgt)
+            migration += plan.bytes_total
+            self._parts[name] = tgt
+        self.rt.planner.stats.elastic_grows += 1
+        self.rt.recovery_log.append({
+            "kind": "instance_join", "rank": rank, "live": list(self.live),
+            "migration_bytes": migration,
+            "plan": ElasticPlan(len(self.live) - 1, len(self.live),
+                                (len(self.live),), migration)})
+
+    # -- cache <-> HDArray mirroring ------------------------------------
+    def _mirror(self) -> None:
+        """Write the engine's current cache leaves into their backing
+        HDArrays (slot axis first, bit-preserving views for non-native
+        dtypes) under the current data layout."""
+        flat = jax.tree_util.tree_leaves(self.engine.cache)
+        for (name, ax, dtype), leaf in zip(self._leaves, flat):
+            if ax < 0:
+                continue
+            host = np.asarray(leaf)
+            if not _is_native(host.dtype):
+                host = host.view(_bit_view(host))
+            if ax != 0:
+                host = np.moveaxis(host, ax, 0)
+            self.rt.write(self.rt.arrays[name],
+                          np.ascontiguousarray(host), self._parts[name])
+
+    def _cache_from_hdarrays(self):
+        """Rebuild the engine's cache pytree from the (restored +
+        repartitioned) HDArrays — the inverse of :meth:`_mirror`.
+        Slot-invariant leaves come from the host snapshot."""
+        snap_static = self._host_snap["static_leaves"]
+        out = []
+        for name, ax, dtype in self._leaves:
+            if ax < 0:
+                out.append(snap_static[name])
+                continue
+            host = self.rt.read_coherent(self.rt.arrays[name])
+            if ax != 0:
+                host = np.moveaxis(host, 0, ax)
+            if not _is_native(np.dtype(dtype)):
+                host = np.ascontiguousarray(host).view(dtype)
+            out.append(jnp.asarray(host))
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
+    # -- host-state snapshots -------------------------------------------
+    def _checkpoint(self) -> None:
+        self._mirror()
+        self.cm.save_runtime(self._ckpt_step, self.rt)
+        self._ckpt_step += 1
+        self._ckpt_decode = self._decode_count
+        eng = self.engine
+        flat = jax.tree_util.tree_leaves(eng.cache)
+        self._host_snap = {
+            "slot_pos": eng.slot_pos.copy(),
+            "slot_live": eng.slot_live.copy(),
+            "slot_tokens": [list(t) for t in eng.slot_tokens],
+            "key": eng._key,
+            "queue": list(eng.queue),
+            "admitted": dict(eng.admitted),
+            "next_ticket": eng._next_ticket,
+            "static_leaves": {name: leaf
+                              for (name, ax, _d), leaf
+                              in zip(self._leaves, flat) if ax < 0},
+        }
+
+    def _restore_host(self, snap: Dict[str, Any]) -> None:
+        eng = self.engine
+        eng.slot_pos = snap["slot_pos"].copy()
+        eng.slot_live = snap["slot_live"].copy()
+        eng.slot_tokens = [list(t) for t in snap["slot_tokens"]]
+        eng._key = snap["key"]
+        eng.queue = collections.deque(snap["queue"])
+        eng.admitted = dict(snap["admitted"])
+        eng._next_ticket = snap["next_ticket"]
+
+
+_BIT_VIEWS = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _is_native(dtype) -> bool:
+    """True for dtypes numpy can serialize losslessly (npz round-trip).
+    Extension dtypes like ml_dtypes' bfloat16 report ``isbuiltin == 2``
+    and kind ``V`` — savez would degrade them to raw void — so the test
+    is the numeric kind set, not ``isbuiltin``."""
+    return np.dtype(dtype).kind in "biufc"
+
+
+def _bit_view(host: np.ndarray):
+    """A same-itemsize native integer dtype for bit-preserving storage
+    of extension dtypes (bfloat16 & co) in numpy-backed HDArrays."""
+    return _BIT_VIEWS[host.dtype.itemsize]

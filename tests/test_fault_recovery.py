@@ -237,6 +237,161 @@ def test_two_rank_losses_sim():
 
 
 # ---------------------------------------------------------------------
+# elastic scale-up: a lost rank REJOINS mid-run — shrink, then grow
+# back onto the full mesh, bit-identical to the uninterrupted run
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("site", ["step", "commit"])
+@pytest.mark.parametrize("lose,rejoin", [(1, 4), (2, 6), (0, 9)])
+def test_lose_rejoin_sweep_sim(lose, rejoin, site):
+    ref = _reference("sim")
+    rt, out, _pol = _run_faulted(
+        "sim", [FaultSpec(lose, kind="rank", rank=2),
+                FaultSpec(rejoin, kind="join", rank=2, site=site)])
+    assert np.array_equal(out, ref)
+    stats = rt.planner.stats
+    assert stats.elastic_shrinks == 1 and stats.elastic_grows == 1
+    join = [r for r in rt.recovery_log if r["kind"] == "rank_join"][-1]
+    assert join["rank"] == 2 and join["live"] == [0, 1, 2, 3]
+    # the grow migration is a PLANNED repartition with real bytes
+    assert join["migration_bytes"] > 0
+    assert join["plan"].new_devices == NPROC
+    assert join["latency_s"] >= 0.0
+    reparts = [e for e in rt.comm_log if e[0].startswith("__repartition_")]
+    assert len(reparts) >= 4        # shrink pair + grow pair
+    # the rejoined rank carries data again
+    for arr in rt.arrays.values():
+        assert not arr.valid[2].is_empty()
+
+
+def test_weighted_rejoin_restores_weight_sim():
+    # the rank that died carries weight 2; its rejoin must restore the
+    # capability proportion, not re-admit it as a unit-weight device
+    ref = _reference("sim", weights=W)
+    rt, out, pol = _run_faulted(
+        "sim", [FaultSpec(2, kind="rank", rank=0),
+                FaultSpec(6, kind="join", rank=0)], weights=W)
+    assert np.array_equal(out, ref)
+    part = rt.parts[pol.data_parts["a"]]
+    assert part.weights == (2.0, 1.0, 1.0, 1.0)
+    rows = [hi - lo for (lo, hi), _ in
+            (part.regions[p].bounds for p in range(NPROC))]
+    assert rows == [7, 3, 3, 3]     # largest-remainder split of 16 @ 2:1:1:1
+
+
+def test_double_lose_rejoin_same_rank_sim():
+    ref = _reference("sim")
+    rt, out, _pol = _run_faulted(
+        "sim", [FaultSpec(1, kind="rank", rank=1),
+                FaultSpec(3, kind="join", rank=1),
+                FaultSpec(5, kind="rank", rank=1),
+                FaultSpec(8, kind="join", rank=1)])
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.elastic_shrinks == 2
+    assert rt.planner.stats.elastic_grows == 2
+    kinds = [r["kind"] for r in rt.recovery_log]
+    assert kinds == ["rank_loss", "rank_join", "rank_loss", "rank_join"]
+
+
+def test_lose_rejoin_two_ranks_sim():
+    ref = _reference("sim")
+    rt, out, _pol = _run_faulted(
+        "sim", [FaultSpec(1, kind="rank", rank=1),
+                FaultSpec(3, kind="rank", rank=3),
+                FaultSpec(6, kind="join", rank=3),
+                FaultSpec(8, kind="join", rank=1)])
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.elastic_shrinks == 2
+    assert rt.planner.stats.elastic_grows == 2
+    assert rt.recovery_log[-1]["live"] == [0, 1, 2, 3]
+
+
+def test_scale_up_never_lost_rank_sim():
+    # a rank that was never lost joining mid-run == plain scale-up:
+    # the mesh starts on 3 of 4 ranks (initial_live) and grows onto
+    # the idle fourth at step 4
+    ref = _reference("sim")
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(NPROC)
+        a, _b, pd, steps = _build(rt, weights=(1, 1, 1, 0))
+        pol = RecoveryPolicy(checkpoint=CheckpointManager(d), interval=3,
+                             injector=FaultInjector(
+                                 [FaultSpec(4, kind="join", rank=3)]),
+                             data_parts={"a": pd, "b": pd},
+                             initial_live=[0, 1, 2])
+        rt.run_pipeline(steps, recovery=pol)
+        out = rt.read_coherent(a)
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.elastic_shrinks == 0
+    assert rt.planner.stats.elastic_grows == 1
+    from repro.core.partition import PartType
+    part = rt.parts[pol.data_parts["a"]]
+    # the grow re-ran the ROW factory (not a manual resplit) and gave
+    # the new rank the mean live weight
+    assert part.ptype is PartType.ROW
+    assert part.weights == (1.0, 1.0, 1.0, 1.0)
+
+
+def test_register_rank_grows_at_step_boundary_sim():
+    # the scale-up entry point: a recovered rank re-registering via
+    # RecoveryPolicy.register_rank (no injected event) grows the mesh
+    # back at the next step boundary
+    ref = _reference("sim")
+    box = {"n": 0, "pol": None}
+
+    def clock():
+        box["n"] += 1
+        if box["n"] == 12 and box["pol"] is not None:
+            box["pol"].register_rank(1)
+        return float(box["n"])
+
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(NPROC)
+        a, _b, pd, steps = _build(rt)
+        pol = RecoveryPolicy(checkpoint=CheckpointManager(d), interval=3,
+                             injector=FaultInjector(
+                                 [FaultSpec(2, kind="rank", rank=1)]),
+                             data_parts={"a": pd, "b": pd}, clock=clock)
+        box["pol"] = pol
+        rt.run_pipeline(steps, recovery=pol)
+        out = rt.read_coherent(a)
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.elastic_shrinks == 1
+    assert rt.planner.stats.elastic_grows == 1
+    assert rt.recovery_log[-1]["kind"] == "rank_join"
+    assert rt.recovery_log[-1]["live"] == [0, 1, 2, 3]
+
+
+def test_null_backend_rejoin_counters():
+    with tempfile.TemporaryDirectory() as d:
+        rt = HDArrayRuntime(NPROC, backend="null")
+        _a, _b, pd, steps = _build(rt, materialized=False)
+        pol = RecoveryPolicy(
+            checkpoint=CheckpointManager(d), interval=2,
+            injector=FaultInjector([FaultSpec(3, kind="rank", rank=2),
+                                    FaultSpec(7, kind="join", rank=2)]),
+            data_parts={"a": pd, "b": pd})
+        rt.run_pipeline(steps, recovery=pol)
+    assert rt.planner.stats.elastic_shrinks == 1
+    assert rt.planner.stats.elastic_grows == 1
+    join = [r for r in rt.recovery_log if r["kind"] == "rank_join"][-1]
+    assert join["migration_bytes"] > 0
+    assert any(e[0].startswith("__repartition_") for e in rt.comm_log)
+
+
+@pytest.mark.parametrize("lose,rejoin", [(2, 5), (4, 9)])
+def test_lose_rejoin_jax(lose, rejoin):
+    _need_devices(NPROC)
+    ref = _reference("jax")
+    rt, out, _pol = _run_faulted(
+        "jax", [FaultSpec(lose, kind="rank", rank=1),
+                FaultSpec(rejoin, kind="join", rank=1)])
+    assert np.array_equal(out, ref)
+    assert rt.planner.stats.elastic_shrinks == 1
+    assert rt.planner.stats.elastic_grows == 1
+    assert rt.recovery_log[-1]["live"] == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------
 # weighted meshes: the same chaos on capability-proportional (unequal)
 # boxes — recovery must stay invisible in the values AND the shrink
 # must preserve the survivors' capability proportions
