@@ -61,6 +61,13 @@ def main() -> None:
         # seeded chaos smoke (CI): parity gates only; run the module
         # directly for the full study that regenerates BENCH_faults.json
         fault_recovery.main(quick=True)
+    if which in ("all", "serve"):
+        print("\n===== Serving cluster: policy x replica parity + "
+              "failover =====")
+        from . import serving
+        # quick smoke (CI): gates only; run the module directly for the
+        # full sweep that regenerates BENCH_serve.json
+        serving.main(quick=True)
     if which in ("all", "hetero"):
         print("\n===== Heterogeneous balance: uniform vs weighted vs "
               "auto-rebalanced =====")

@@ -1,5 +1,17 @@
 from .engine import (ServeConfig, Engine, RecoveryEngine, SlotsExhausted,
                      make_prefill_step, make_decode_step, sample_tokens)
+from .membership import Membership, MembershipConfig, MembershipEvent
+from .metrics import RequestMetrics, ServeMetrics, percentile
+from .pool import ReplicaPool
+from .router import (LoadAwareRouter, PrefixAwareRouter, ReplicaView,
+                     RoundRobinRouter, Router, TokenTrie, get_router)
+from .scheduler import PriorityScheduler, QueueFull, QueuedRequest
 
 __all__ = ["ServeConfig", "Engine", "RecoveryEngine", "SlotsExhausted",
-           "make_prefill_step", "make_decode_step", "sample_tokens"]
+           "make_prefill_step", "make_decode_step", "sample_tokens",
+           "Membership", "MembershipConfig", "MembershipEvent",
+           "RequestMetrics", "ServeMetrics", "percentile",
+           "ReplicaPool",
+           "LoadAwareRouter", "PrefixAwareRouter", "ReplicaView",
+           "RoundRobinRouter", "Router", "TokenTrie", "get_router",
+           "PriorityScheduler", "QueueFull", "QueuedRequest"]

@@ -15,8 +15,20 @@ by `examples/serve_lm.py`:
     rows are kept),
   * sampling: greedy / temperature / top-k, all in fp32 logits,
   * backpressure: with every slot busy, requests queue up to
-    ``queue_depth`` (FIFO, drained on ``finish``) and beyond that
-    raise the typed :class:`SlotsExhausted`,
+    ``queue_depth`` (priority-ordered, FIFO within a priority level,
+    drained on ``finish``/``cancel``) and beyond that raise the typed
+    :class:`SlotsExhausted`,
+  * cancellation: ``cancel(ticket)`` removes a queued request;
+    ``cancel(slot)`` aborts a live decode, frees the slot, and
+    backfills it from the admission queue,
+  * prefix reuse (``ServeConfig(prefix_reuse=True)``): when another
+    slot's cache rows start with a prefix of the new prompt, the
+    matched rows are copied (KV at position i is a pure function of
+    tokens[0..i] under causal attention, so the copy is bit-identical
+    to recomputing) and only the suffix is prefilled — the
+    router-visible "prefill work" drops by the matched length.  Only
+    cache families with a per-position seq axis support this (full KV,
+    MLA latent); ring/recurrent families auto-disable,
   * failover: :class:`RecoveryEngine` backs the slot KV caches with
     HDArrays partitioned over serving instances (ranks), so an
     instance loss mid-request is the ft layer's planned shrink — KV
@@ -55,6 +67,7 @@ class ServeConfig:
     temperature: float = 0.0    # 0 => greedy
     top_k: int = 0              # 0 => full softmax
     queue_depth: int = 0        # admission queue size (0 => reject)
+    prefix_reuse: bool = False  # copy matching cached prefix rows on admit
 
 
 def sample_tokens(logits, key, temperature: float = 0.0, top_k: int = 0):
@@ -104,9 +117,10 @@ class Engine:
         self.slot_pos = np.zeros(scfg.slots, np.int32)      # next write pos
         self.slot_live = np.zeros(scfg.slots, bool)
         self.slot_tokens: List[List[int]] = [[] for _ in range(scfg.slots)]
-        # admission queue (backpressure): FIFO of deferred requests,
-        # drained into freed slots on finish(); `admitted` maps each
-        # drained ticket (negative id) to the slot it landed in
+        # admission queue (backpressure): deferred requests drained
+        # into freed slots on finish()/cancel() in (priority desc,
+        # arrival asc) order; `admitted` maps each drained ticket
+        # (negative id) to the slot it landed in
         self.queue: collections.deque = collections.deque()
         self.admitted: Dict[int, int] = {}
         self._next_ticket = -1
@@ -121,23 +135,53 @@ class Engine:
                                if s0 != s1), -1),
             self.cache, probe)
         del probe
+        # which axis is the per-position (seq) dim, probed the same way
+        # with one extra cache row — prefix reuse copies rows along it.
+        # Leaves without one (ring slabs, recurrent state, `pos`) get
+        # -1; a slot-carrying non-`pos` leaf with no seq axis means the
+        # family folds history into running state, so reuse is off.
+        probe = bundle.init_cache(scfg.slots, scfg.max_seq + 1)
+        self._seq_axis = jax.tree.map(
+            lambda c, p: next((d for d, (s0, s1)
+                               in enumerate(zip(c.shape, p.shape))
+                               if s0 != s1), -1),
+            self.cache, probe)
+        del probe
+        paths = [jax.tree_util.keystr(path) for path, _ in
+                 jax.tree_util.tree_flatten_with_path(self.cache)[0]]
+        self.supports_prefix_reuse = all(
+            tax >= 0 or sax < 0 or "pos" in name
+            for name, sax, tax in zip(
+                paths, jax.tree_util.tree_leaves(self._slot_axis),
+                jax.tree_util.tree_leaves(self._seq_axis)))
+        # the token sequence whose KV currently occupies each slot's
+        # cache rows (positions 0..len-1) — retained after finish()
+        # until the slot is reused, so finished sequences act as a
+        # prefix cache; len(kv_tokens[s]) == slot_pos[s] while live
+        self.kv_tokens: List[List[int]] = [[] for _ in range(scfg.slots)]
+        # prefill-work accounting for the router/benchmark layer
+        self.prefill_tokens_computed = 0
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
 
     # ------------------------------------------------------------------
     def add_request(self, prompt_tokens: np.ndarray,
-                    extra_inputs: Optional[Dict[str, Any]] = None) -> int:
+                    extra_inputs: Optional[Dict[str, Any]] = None,
+                    priority: int = 0) -> int:
         """Prefill `prompt_tokens` into a free slot; returns the slot
         id (>= 0).  With every slot busy the request queues (up to
         ``queue_depth``) and a NEGATIVE ticket id returns instead —
-        ``finish`` drains the queue into freed slots and records
-        ticket -> slot in :attr:`admitted`.  Queue full (or disabled)
-        raises :class:`SlotsExhausted`."""
+        ``finish``/``cancel`` drain the queue into freed slots in
+        (priority desc, arrival asc) order and record ticket -> slot
+        in :attr:`admitted`.  Queue full (or disabled) raises
+        :class:`SlotsExhausted`."""
         free = np.flatnonzero(~self.slot_live)
         if free.size == 0:
             if len(self.queue) < self.scfg.queue_depth:
                 ticket = self._next_ticket
                 self._next_ticket -= 1
                 self.queue.append((ticket, np.asarray(prompt_tokens),
-                                   extra_inputs))
+                                   extra_inputs, int(priority)))
                 return ticket
             raise SlotsExhausted(
                 f"no free slots ({self.scfg.slots} busy) and the "
@@ -146,12 +190,59 @@ class Engine:
         return self._admit(int(free[0]), np.asarray(prompt_tokens),
                            extra_inputs)
 
+    def cancel(self, tid: int) -> Optional[List[int]]:
+        """Abort a request.  ``tid`` < 0 (a queue ticket): the queued
+        request is removed before it ever touches a slot (a drained
+        ticket resolves through :attr:`admitted` to its slot first).
+        ``tid`` >= 0 (a live slot): the slot is freed mid-decode and
+        backfilled from the admission queue, and the tokens produced
+        so far return.  Raises KeyError for an unknown/idle id."""
+        if tid < 0:
+            if tid in self.admitted:
+                return self.cancel(self.admitted.pop(tid))
+            for i, entry in enumerate(self.queue):
+                if entry[0] == tid:
+                    del self.queue[i]
+                    return None
+            raise KeyError(f"ticket {tid} is not queued")
+        if not (0 <= tid < self.scfg.slots) or not self.slot_live[tid]:
+            raise KeyError(f"slot {tid} is not live")
+        self.slot_live[tid] = False
+        toks, self.slot_tokens[tid] = self.slot_tokens[tid], []
+        self.slot_pos[tid] = 0
+        self._drain_queue()
+        return toks
+
+    def _drain_queue(self) -> None:
+        """Admit the best queued request (priority desc, then arrival
+        order — earlier tickets are numerically GREATER) into a free
+        slot, recording ticket -> slot in :attr:`admitted`."""
+        if not self.queue:
+            return
+        best = max(range(len(self.queue)),
+                   key=lambda i: (self.queue[i][3], self.queue[i][0]))
+        ticket, prompt, extra, _prio = self.queue[best]
+        del self.queue[best]
+        slot = int(np.flatnonzero(~self.slot_live)[0])
+        self.admitted[ticket] = self._admit(slot, prompt, extra)
+
     def _admit(self, sid: int, prompt_tokens: np.ndarray,
                extra_inputs: Optional[Dict[str, Any]]) -> int:
         T = len(prompt_tokens)
         B = self.scfg.slots
-        toks = np.zeros((B, T), np.int32)
-        toks[sid] = prompt_tokens
+        # prefix reuse: find the slot whose cached rows share the
+        # longest prefix with this prompt, copy those rows, and only
+        # prefill the suffix (L is capped at T-1: the last prompt
+        # token always runs so prefill has logits to return)
+        L, src = 0, sid
+        if (self.scfg.prefix_reuse and self.supports_prefix_reuse
+                and not extra_inputs):
+            src, L = self._best_prefix(prompt_tokens)
+        snapshot = jax.tree.map(lambda x: x, self.cache)
+        if L > 0 and src != sid:
+            self._copy_prefix_rows(src, sid, L)
+        toks = np.zeros((B, T - L), np.int32)
+        toks[sid] = prompt_tokens[L:]
         batch = {"tokens": jnp.asarray(toks)}
         if extra_inputs:
             batch.update(extra_inputs)
@@ -160,18 +251,55 @@ class Engine:
         # advances every slot's pos).  Keep only the admitted slot's
         # rows; every other live slot's cache is bit-identical to its
         # pre-prefill snapshot.
-        snapshot = jax.tree.map(lambda x: x, self.cache)
         for g in self._cache_groups():
-            g["pos"] = jnp.where(jnp.arange(B) == sid, 0, g["pos"])
+            g["pos"] = jnp.where(jnp.arange(B) == sid, L, g["pos"])
         logits, cache = self._prefill(self.params, batch, self.cache)
         self.cache = self._scatter_slot(snapshot, cache, sid)
         self.slot_pos[sid] = T
         self.slot_live[sid] = True
         self.slot_tokens[sid] = list(map(int, prompt_tokens))
+        self.kv_tokens[sid] = list(map(int, prompt_tokens))
+        self.prefill_tokens_computed += T - L
+        if L > 0:
+            self.prefix_hits += 1
+            self.prefix_tokens_reused += L
         # first generated token
         tok = self._sample(logits)
         self.slot_tokens[sid].append(int(tok[sid, 0]))
         return sid
+
+    def _best_prefix(self, prompt: np.ndarray) -> Tuple[int, int]:
+        """(slot, match length): the slot whose cached token rows share
+        the longest common prefix with `prompt` (live or retained),
+        capped at len(prompt)-1.  Ties break to the lowest slot id."""
+        best_s, best_l = 0, 0
+        cap = len(prompt) - 1
+        for s in range(self.scfg.slots):
+            cached = self.kv_tokens[s]
+            n = min(cap, len(cached))
+            m = 0
+            while m < n and cached[m] == int(prompt[m]):
+                m += 1
+            if m > best_l:
+                best_s, best_l = s, m
+        return best_s, best_l
+
+    def _copy_prefix_rows(self, src: int, dst: int, L: int) -> None:
+        """Copy cache rows [0, L) (along each leaf's seq axis) from
+        slot `src` to slot `dst`.  Bit-identical to recomputing them:
+        under causal attention KV at position i depends only on
+        tokens[0..i], which match by construction."""
+        def copy(leaf, sax, tax):
+            if sax < 0 or tax < 0:
+                return leaf
+            src_ix = [slice(None)] * leaf.ndim
+            dst_ix = [slice(None)] * leaf.ndim
+            src_ix[sax], dst_ix[sax] = src, dst
+            src_ix[tax] = dst_ix[tax] = slice(0, L)
+            return leaf.at[tuple(dst_ix)].set(leaf[tuple(src_ix)])
+
+        self.cache = jax.tree.map(copy, self.cache, self._slot_axis,
+                                  self._seq_axis)
 
     def _scatter_slot(self, old, new, sid: int):
         """Merge two cache pytrees: slot `sid`'s rows from `new`,
@@ -201,6 +329,8 @@ class Engine:
         out = {}
         for s in range(B):
             if self.slot_live[s]:
+                # the fed token's KV was just written at slot_pos[s]
+                self.kv_tokens[s].append(int(last[s, 0]))
                 t = int(toks[s, 0])
                 self.slot_tokens[s].append(t)
                 self.slot_pos[s] += 1
@@ -211,11 +341,10 @@ class Engine:
         self.slot_live[sid] = False
         toks, self.slot_tokens[sid] = self.slot_tokens[sid], []
         self.slot_pos[sid] = 0
-        # drain the admission queue into the freed slot (FIFO)
-        if self.queue:
-            ticket, prompt, extra = self.queue.popleft()
-            slot = int(np.flatnonzero(~self.slot_live)[0])
-            self.admitted[ticket] = self._admit(slot, prompt, extra)
+        # kv_tokens[sid] is deliberately retained: the finished
+        # sequence's cache rows stay valid until the slot is reused,
+        # so they keep serving as a prefix cache
+        self._drain_queue()
         return toks
 
     def generate(self, prompt_tokens: np.ndarray, n_tokens: int,
@@ -303,19 +432,40 @@ class RecoveryEngine:
         self._ckpt_step = 0
         self._ckpt_decode = 0
         self._host_snap = None
+        # injected per-instance slowdown (seconds added to that
+        # instance's reported step latency) — deterministic straggler
+        # modeling for tests and the serving benchmark
+        self.step_cost: Dict[int, float] = {}
+        self.last_step_time = 0.0
         self._checkpoint()
 
     # -- engine API (checkpointed) -------------------------------------
-    def add_request(self, prompt_tokens, extra_inputs=None) -> int:
+    def add_request(self, prompt_tokens, extra_inputs=None,
+                    priority: int = 0) -> int:
         sid = self.engine.add_request(np.asarray(prompt_tokens),
-                                      extra_inputs)
+                                      extra_inputs, priority=priority)
         # checkpoint right after the admit so the replay window after
         # a failure only ever contains decode steps
         self._checkpoint()
         return sid
 
     def step(self) -> Dict[int, int]:
+        import time as _time
+        t0 = _time.perf_counter()
         out = self.engine.step()
+        dt = _time.perf_counter() - t0
+        # per-instance step latency: the decode is one synchronous
+        # program over the slot pool, so each live instance's share of
+        # the step is the measured wall time plus its injected
+        # `step_cost` (tests/benchmarks model a slow instance with it);
+        # dead instances report 0.0 (skipped by the monitor).  Lands in
+        # PlannerStats.rank_step_times so the Rebalancer /
+        # StragglerMonitor machinery — and through them the load-aware
+        # router — can flag a slow replica.
+        times = [dt + self.step_cost.get(r, 0.0) if r in self.live else 0.0
+                 for r in range(self.instances)]
+        self.rt.planner.stats.note_rank_times(self._decode_count, times)
+        self.last_step_time = max(times)
         self._decode_count += 1
         self._mirror()
         if self._decode_count - self._ckpt_decode >= self.checkpoint_interval:
@@ -324,6 +474,11 @@ class RecoveryEngine:
 
     def finish(self, sid: int) -> List[int]:
         out = self.engine.finish(sid)
+        self._checkpoint()
+        return out
+
+    def cancel(self, tid: int) -> Optional[List[int]]:
+        out = self.engine.cancel(tid)
         self._checkpoint()
         return out
 
@@ -464,6 +619,7 @@ class RecoveryEngine:
             "slot_pos": eng.slot_pos.copy(),
             "slot_live": eng.slot_live.copy(),
             "slot_tokens": [list(t) for t in eng.slot_tokens],
+            "kv_tokens": [list(t) for t in eng.kv_tokens],
             "key": eng._key,
             "queue": list(eng.queue),
             "admitted": dict(eng.admitted),
@@ -478,6 +634,7 @@ class RecoveryEngine:
         eng.slot_pos = snap["slot_pos"].copy()
         eng.slot_live = snap["slot_live"].copy()
         eng.slot_tokens = [list(t) for t in snap["slot_tokens"]]
+        eng.kv_tokens = [list(t) for t in snap["kv_tokens"]]
         eng._key = snap["key"]
         eng.queue = collections.deque(snap["queue"])
         eng.admitted = dict(snap["admitted"])

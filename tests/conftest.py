@@ -19,3 +19,19 @@ if "jax" not in __import__("sys").modules:
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (flags + " " + _FLAG).strip()
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def serve_model():
+    """One reduced model shared by all serving-cluster test modules
+    (the bundle build + param init dominates their setup time)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import build
+
+    cfg = get_config("yi-9b").reduced()
+    bundle = build(cfg)
+    params, _ = bundle.init(jax.random.PRNGKey(0))
+    return bundle, params

@@ -1,0 +1,148 @@
+"""Load-aware routing: least-outstanding dispatch under skewed load,
+straggler-flag avoidance fed by RecoveryEngine per-instance step
+latencies (PlannerStats.rank_step_times), and deterministic tie-breaks."""
+import numpy as np
+
+from repro.serve import (LoadAwareRouter, ReplicaPool, ReplicaView,
+                         ServeConfig)
+
+
+def _view(rid, outstanding=0, straggler=False):
+    return ReplicaView(replica_id=rid, free_slots=1,
+                       outstanding=outstanding, step_ewma=0.0,
+                       straggler=straggler)
+
+
+# ----------------------------------------------------------------------
+# router units
+# ----------------------------------------------------------------------
+def test_load_aware_picks_least_outstanding():
+    r = LoadAwareRouter()
+    assert r.choose([], [_view(0, 3), _view(1, 1), _view(2, 2)]) == 1
+
+
+def test_load_aware_tie_breaks_to_lower_id():
+    r = LoadAwareRouter()
+    assert r.choose([], [_view(1, 2), _view(0, 2)]) == 0
+
+
+def test_load_aware_avoids_flagged_straggler():
+    r = LoadAwareRouter()
+    # replica 0 is less loaded but currently flagged slow
+    views = [_view(0, 0, straggler=True), _view(1, 2)]
+    assert r.choose([], views) == 1
+    # with every candidate flagged, load decides again
+    views = [_view(0, 2, straggler=True), _view(1, 1, straggler=True)]
+    assert r.choose([], views) == 1
+
+
+# ----------------------------------------------------------------------
+# cluster: skewed queues
+# ----------------------------------------------------------------------
+def test_cluster_load_aware_routes_around_busy_replica(serve_model):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(0)
+    scfg = ServeConfig(max_seq=64, slots=2)
+    pool = ReplicaPool(bundle, params, scfg, replicas=2, instances=2,
+                       policy="load_aware")
+    # two long-running requests: the load-aware tie-breaks place one
+    # per replica (0 then 1)
+    long_a = pool.submit(rng.integers(0, V, 6), max_new=12)
+    long_b = pool.submit(rng.integers(0, V, 6), max_new=12)
+    # one short request -> replica 0 (tied outstanding, lower id)
+    short = pool.submit(rng.integers(0, V, 4), max_new=2)
+    for _ in range(3):
+        pool.step()
+    recs = pool.metrics.requests
+    assert recs[long_a].replica == 0
+    assert recs[long_b].replica == 1
+    assert recs[short].replica == 0
+    assert pool.status(short) == "done"
+    # replica 1 still has a live slot + a fresh free slot; replica 0
+    # now has one live slot and one free -> tie broken by outstanding:
+    # both have 1 outstanding, so the lower id (0) wins again
+    tie = pool.submit(rng.integers(0, V, 4), max_new=2)
+    pool.step()
+    assert recs[tie].replica == 0
+    # skew replica 0: fill BOTH its slots with long work, then the
+    # next request must land on replica 1 despite the id tie-break
+    filler = pool.submit(rng.integers(0, V, 4), max_new=12)
+    pool.step()
+    assert recs[filler].replica == 0
+    skewed = pool.submit(rng.integers(0, V, 4), max_new=2)
+    pool.step()
+    assert recs[skewed].replica == 1
+    pool.run(max_ticks=40)
+
+
+# ----------------------------------------------------------------------
+# straggler signal: per-instance latency -> monitor -> router
+# ----------------------------------------------------------------------
+def test_recovery_engine_surfaces_rank_step_times(serve_model):
+    """Satellite: RecoveryEngine.step() lands per-instance latency in
+    PlannerStats.rank_step_times (dead instances report 0.0)."""
+    from repro.serve import RecoveryEngine
+
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(1)
+    eng = RecoveryEngine(bundle, params, ServeConfig(max_seq=64, slots=2),
+                         instances=3)
+    eng.step_cost = {1: 0.25}
+    eng.add_request(rng.integers(0, V, 5))
+    eng.step()
+    times = eng.rt.planner.stats.rank_step_times
+    assert len(times) == 1
+    step, ts = times[0]
+    assert len(ts) == 3 and all(t > 0 for t in ts)
+    # the injected slowdown is attributed to instance 1 only
+    assert ts[1] >= ts[0] + 0.25 and ts[1] >= ts[2] + 0.25
+    assert eng.last_step_time == max(ts)
+    # a dead instance reports 0.0
+    eng.fail_instance(1)
+    eng.step()
+    _, ts2 = eng.rt.planner.stats.rank_step_times[-1]
+    assert ts2[1] == 0.0 and ts2[0] > 0 and ts2[2] > 0
+
+
+def test_cluster_straggler_flag_steers_load_aware_router(serve_model):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(2)
+    scfg = ServeConfig(max_seq=64, slots=2)
+    pool = ReplicaPool(bundle, params, scfg, replicas=2, instances=2,
+                       policy="load_aware", straggler_threshold=2.0,
+                       straggler_cooldown=16)
+    # make replica 0's instance 0 slow: its injected step cost rides
+    # into the pool's per-replica step times
+    pool.replicas[0].step_cost = {0: 0.5}
+    # keep BOTH replicas decoding so the monitor sees comparable work
+    a = pool.submit(rng.integers(0, V, 5), max_new=10)
+    b = pool.submit(rng.integers(0, V, 5), max_new=10)
+    for _ in range(6):                 # monitor warmup is 3 ticks
+        pool.step()
+    recs = pool.metrics.requests
+    assert recs[a].replica == 0 and recs[b].replica == 1
+    assert any(e["kind"] == "straggler" and e["replica"] == 0
+               for e in pool.metrics.events)
+    # replica 0 has the FREE slot advantage-by-id, but the flag steers
+    # the new request to healthy replica 1
+    c = pool.submit(rng.integers(0, V, 4), max_new=2)
+    pool.step()
+    assert recs[c].replica == 1
+    pool.run(max_ticks=40)
+
+
+def test_round_robin_spreads_evenly(serve_model):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(3)
+    scfg = ServeConfig(max_seq=64, slots=2)
+    pool = ReplicaPool(bundle, params, scfg, replicas=2, instances=2,
+                       policy="round_robin")
+    rids = [pool.submit(rng.integers(0, V, 4), max_new=2)
+            for _ in range(4)]
+    pool.run(max_ticks=40)
+    assignment = [pool.metrics.requests[r].replica for r in rids]
+    assert assignment == [0, 1, 0, 1]

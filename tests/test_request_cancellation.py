@@ -1,0 +1,241 @@
+"""Cancellation: engine tickets and live slots, priority admission
+order, scheduler tombstones and deadlines, and pool-level cancel
+mid-queue / mid-decode — none of which may perturb other streams."""
+import numpy as np
+import pytest
+
+from repro.serve import (Engine, PriorityScheduler, QueuedRequest,
+                         QueueFull, RecoveryEngine, ReplicaPool,
+                         ServeConfig)
+
+
+# ----------------------------------------------------------------------
+# scheduler units
+# ----------------------------------------------------------------------
+def test_scheduler_orders_priority_deadline_arrival():
+    s = PriorityScheduler()
+    s.push(QueuedRequest(0, priority=0))
+    s.push(QueuedRequest(1, priority=5))
+    s.push(QueuedRequest(2, priority=5, deadline_tick=10))
+    s.push(QueuedRequest(3, priority=5, deadline_tick=20))
+    # priority desc, then deadline asc (None last), then arrival asc
+    assert [s.pop(0) for _ in range(4)] == [2, 3, 1, 0]
+    assert s.pop(0) is None
+
+
+def test_scheduler_arrival_tie_break_is_fifo():
+    s = PriorityScheduler()
+    for rid in (7, 8, 9):
+        s.push(QueuedRequest(rid, priority=1))
+    assert [s.pop(0) for _ in range(3)] == [7, 8, 9]
+
+
+def test_scheduler_cancel_tombstone():
+    s = PriorityScheduler()
+    s.push(QueuedRequest(0, priority=9))
+    s.push(QueuedRequest(1))
+    assert s.cancel(0)
+    assert not s.cancel(0)          # already tombstoned
+    assert not s.cancel(42)         # never queued
+    assert len(s) == 1
+    assert s.pop(0) == 1
+    assert s.pop(0) is None
+
+
+def test_scheduler_deadline_expiry():
+    s = PriorityScheduler()
+    s.push(QueuedRequest(0, deadline_tick=3))
+    s.push(QueuedRequest(1))
+    assert s.pop(5) == 1            # 0 expired on the way
+    assert s.expired == [0]
+
+
+def test_scheduler_max_pending():
+    s = PriorityScheduler(max_pending=1)
+    s.push(QueuedRequest(0))
+    with pytest.raises(QueueFull):
+        s.push(QueuedRequest(1))
+    # cancelling frees capacity
+    s.cancel(0)
+    s.push(QueuedRequest(1))
+
+
+# ----------------------------------------------------------------------
+# engine: priority queue + cancel
+# ----------------------------------------------------------------------
+def test_engine_priority_queue_admission_order(serve_model):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(0)
+    eng = Engine(bundle, params,
+                 ServeConfig(max_seq=64, slots=1, queue_depth=3))
+    sid = eng.add_request(rng.integers(0, V, 4))
+    t_low = eng.add_request(rng.integers(0, V, 4), priority=0)
+    t_high = eng.add_request(rng.integers(0, V, 4), priority=5)
+    t_low2 = eng.add_request(rng.integers(0, V, 4), priority=0)
+    assert t_low < 0 and t_high < 0 and t_low2 < 0
+    # the high-priority request jumps the earlier low-priority one
+    eng.finish(sid)
+    assert eng.admitted == {t_high: sid}
+    # equal priorities drain FIFO
+    eng.finish(sid)
+    assert eng.admitted[t_low] == sid
+    eng.finish(sid)
+    assert eng.admitted[t_low2] == sid
+    eng.finish(sid)
+
+
+def test_engine_cancel_queued_ticket(serve_model):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(1)
+    eng = Engine(bundle, params,
+                 ServeConfig(max_seq=64, slots=1, queue_depth=2))
+    sid = eng.add_request(rng.integers(0, V, 4))
+    t1 = eng.add_request(rng.integers(0, V, 4))
+    t2 = eng.add_request(rng.integers(0, V, 4))
+    assert eng.cancel(t1) is None           # removed before running
+    assert len(eng.queue) == 1
+    with pytest.raises(KeyError):
+        eng.cancel(t1)
+    eng.finish(sid)
+    assert eng.admitted[t2] == sid          # t2 backfilled, not t1
+    eng.finish(sid)
+
+
+def test_engine_cancel_live_slot_backfills_and_keeps_streams(serve_model):
+    """Mid-decode cancel: the slot frees, its queue ticket backfills,
+    and the surviving request's stream is bit-identical to a run
+    without any cancellation."""
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(2)
+    pa, pb, pc = (rng.integers(0, V, n) for n in (6, 5, 7))
+
+    solo = Engine(bundle, params, ServeConfig(max_seq=64, slots=2))
+    want_a = solo.generate(pa, 8)
+    want_c = solo.generate(pc, 6)
+
+    eng = Engine(bundle, params,
+                 ServeConfig(max_seq=64, slots=2, queue_depth=1))
+    sa = eng.add_request(pa)
+    sb = eng.add_request(pb)
+    tc = eng.add_request(pc)                # queued behind a full pool
+    for _ in range(2):
+        eng.step()
+    partial = eng.cancel(sb)                # mid-decode abort
+    assert len(partial) == len(pb) + 3      # prefill token + 2 steps
+    assert eng.admitted[tc] == sb           # ticket backfilled the slot
+    for _ in range(5):
+        eng.step()
+    assert eng.finish(sa) == want_a, "cancel must not perturb slot A"
+    assert eng.finish(eng.admitted[tc]) == want_c
+    # cancelling an idle slot is a KeyError
+    with pytest.raises(KeyError):
+        eng.cancel(0)
+
+
+def test_engine_cancel_admitted_ticket_resolves_to_slot(serve_model):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(3)
+    eng = Engine(bundle, params,
+                 ServeConfig(max_seq=64, slots=1, queue_depth=1))
+    sid = eng.add_request(rng.integers(0, V, 4))
+    t = eng.add_request(rng.integers(0, V, 4))
+    eng.finish(sid)                          # t drains into the slot
+    toks = eng.cancel(t)                     # cancel via the TICKET id
+    assert toks is not None and len(toks) == 5
+    assert not eng.slot_live.any()
+
+
+def test_recovery_engine_cancel_checkpoint_consistent(serve_model):
+    """Cancel inside a RecoveryEngine, then fail an instance: the
+    failover replay must reproduce the post-cancel state exactly."""
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(4)
+    pa, pb = rng.integers(0, V, 6), rng.integers(0, V, 5)
+    scfg = ServeConfig(max_seq=64, slots=3)
+
+    def run(fail_at=None):
+        eng = RecoveryEngine(bundle, params, scfg, instances=3,
+                             checkpoint_interval=2)
+        sa = eng.add_request(pa)
+        sb = eng.add_request(pb)
+        for i in range(6):
+            if i == 2:
+                eng.cancel(sb)
+            if fail_at is not None and i == fail_at:
+                eng.fail_instance(1)
+            eng.step()
+        return eng.finish(sa)
+
+    assert run(fail_at=4) == run()
+
+
+# ----------------------------------------------------------------------
+# pool-level cancellation + deadlines
+# ----------------------------------------------------------------------
+def test_pool_cancel_queued_and_running(serve_model):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(5)
+    scfg = ServeConfig(max_seq=64, slots=1)
+    prompts = [rng.integers(0, V, 5) for _ in range(3)]
+
+    ref = ReplicaPool(bundle, params, scfg, replicas=1, instances=2)
+    keep = ref.submit(prompts[0], max_new=6)
+    ref.run()
+    want = ref.result(keep)
+
+    pool = ReplicaPool(bundle, params, scfg, replicas=1, instances=2)
+    r0 = pool.submit(prompts[0], max_new=6)
+    r1 = pool.submit(prompts[1], max_new=6)   # waits in the scheduler
+    r2 = pool.submit(prompts[2], max_new=6)
+    pool.step()
+    assert pool.status(r0) == "running"
+    assert pool.cancel(r1)                    # mid-queue
+    assert pool.status(r1) == "cancelled"
+    pool.step()
+    assert pool.cancel(r0)                    # mid-decode
+    partial = pool.result(r0)
+    assert partial == want[:len(partial)]     # prefix of the reference
+    pool.run(max_ticks=30)
+    assert pool.status(r2) == "done"          # r2 took the freed slot
+    assert pool.result(r2) is not None
+    assert not pool.cancel(r0)                # already terminal
+
+
+def test_pool_deadline_expiry(serve_model):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(6)
+    scfg = ServeConfig(max_seq=64, slots=1)
+    pool = ReplicaPool(bundle, params, scfg, replicas=1, instances=2)
+    blocker = pool.submit(rng.integers(0, V, 4), max_new=8)
+    pool.step()                     # blocker occupies the only slot
+    doomed = pool.submit(rng.integers(0, V, 4), max_new=2, deadline_in=2)
+    pool.run(max_ticks=30)
+    assert pool.status(blocker) == "done"
+    assert pool.status(doomed) == "expired"
+    assert pool.metrics.requests[doomed].status == "expired"
+    # an expired request never touched a slot
+    assert pool.metrics.requests[doomed].replica is None
+
+
+def test_pool_priority_preempts_queue_order(serve_model):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(7)
+    scfg = ServeConfig(max_seq=64, slots=1)
+    pool = ReplicaPool(bundle, params, scfg, replicas=1, instances=2)
+    first = pool.submit(rng.integers(0, V, 4), max_new=3)
+    low = pool.submit(rng.integers(0, V, 4), max_new=2, priority=0)
+    high = pool.submit(rng.integers(0, V, 4), max_new=2, priority=9)
+    pool.run(max_ticks=30)
+    recs = pool.metrics.requests
+    # all three are queued at tick 1: priority 9 takes the slot first,
+    # then the equal-priority pair drains in arrival order
+    assert recs[high].admitted_tick < recs[first].admitted_tick
+    assert recs[first].admitted_tick < recs[low].admitted_tick

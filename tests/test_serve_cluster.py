@@ -1,0 +1,226 @@
+"""Serving cluster: membership state machine, membership-DRIVEN
+failover (no caller ever invokes fail_instance/rejoin_instance), token
+streams gated bit-identical vs the fault-free run, and the per-request
+metrics layer."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serve import (Membership, MembershipConfig, ReplicaPool,
+                         ServeConfig, percentile)
+
+
+# ----------------------------------------------------------------------
+# membership state machine units
+# ----------------------------------------------------------------------
+def test_membership_miss_streak_suspect_then_dead():
+    m = Membership({0: [0, 1]},
+                   MembershipConfig(suspect_after=2, dead_after=4))
+    assert m.tick(0, {0, 1}, 1) == []
+    assert m.tick(0, {0}, 2) == []                 # rank 1: miss 1
+    ev = m.tick(0, {0}, 3)                         # miss 2 -> suspect
+    assert [(e.kind, e.rank) for e in ev] == [("suspect", 1)]
+    assert m.tick(0, {0}, 4) == []                 # miss 3
+    ev = m.tick(0, {0}, 5)                         # miss 4 -> dead
+    assert [(e.kind, e.rank) for e in ev] == [("dead", 1)]
+    assert m.state[(0, 1)] == "dead"
+
+
+def test_membership_beat_resets_suspect():
+    m = Membership({0: [0, 1]},
+                   MembershipConfig(suspect_after=1, dead_after=3))
+    m.tick(0, {0}, 1)                              # rank 1 suspect
+    assert m.state[(0, 1)] == "suspect"
+    ev = m.tick(0, {0, 1}, 2)                      # beat -> alive again
+    assert [(e.kind, e.rank) for e in ev] == [("alive", 1)]
+    # the miss counter reset: it takes a fresh streak to kill it
+    m.tick(0, {0}, 3)
+    m.tick(0, {0}, 4)
+    assert m.state[(0, 1)] == "suspect"
+    ev = m.tick(0, {0}, 5)
+    assert [(e.kind, e.rank) for e in ev] == [("dead", 1)]
+
+
+def test_membership_rejoin_debounced():
+    m = Membership({0: [0, 1]},
+                   MembershipConfig(suspect_after=1, dead_after=2,
+                                    rejoin_after=2))
+    m.tick(0, {0}, 1)
+    m.tick(0, {0}, 2)                              # rank 1 dead
+    assert m.state[(0, 1)] == "dead"
+    assert m.tick(0, {0, 1}, 3) == []              # 1st beat: no join yet
+    m.tick(0, {0}, 4)                              # flap: streak resets
+    assert m.tick(0, {0, 1}, 5) == []
+    ev = m.tick(0, {0, 1}, 6)                      # 2nd consecutive beat
+    assert [(e.kind, e.rank) for e in ev] == [("join", 1)]
+    assert m.state[(0, 1)] == "alive"
+
+
+def test_membership_config_validation():
+    with pytest.raises(ValueError):
+        MembershipConfig(suspect_after=5, dead_after=3)
+    with pytest.raises(ValueError):
+        MembershipConfig(suspect_after=0)
+
+
+# ----------------------------------------------------------------------
+# metrics units
+# ----------------------------------------------------------------------
+def test_percentile():
+    assert percentile([], 0.5) is None
+    assert percentile([3.0], 0.99) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.5) == 2.5
+    assert percentile([1.0, 2.0, 3.0, 4.0], 1.0) == 4.0
+
+
+# ----------------------------------------------------------------------
+# membership-driven failover, bit-identical streams
+# ----------------------------------------------------------------------
+def _run_cluster(bundle, params, scfg, prompts, fail=None):
+    """Serve `prompts` on a 2-replica x 3-instance pool; `fail` =
+    (replica, rank, at_tick, down_for) suppresses that instance's
+    heartbeats mid-run.  Returns (streams, pool)."""
+    pool = ReplicaPool(bundle, params, scfg, replicas=2, instances=3,
+                       policy="round_robin",
+                       membership=MembershipConfig(suspect_after=1,
+                                                   dead_after=2,
+                                                   rejoin_after=2))
+    rids = [pool.submit(p, max_new=10) for p in prompts]
+    for tick in range(1, 18):
+        if fail is not None and tick == fail[2]:
+            pool.inject_instance_failure(fail[0], fail[1],
+                                         down_for=fail[3])
+        pool.step()
+    assert pool.pending == 0
+    return [pool.result(r) for r in rids], pool
+
+
+def test_cluster_membership_failover_bit_identical(serve_model):
+    """An instance stops heartbeating mid-decode: membership confirms
+    it dead (planned shrink, KV migrates, window replays), then its
+    heartbeats resume and membership rejoins it (planned grow) — all
+    with zero caller involvement and bit-identical token streams."""
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(0)
+    scfg = ServeConfig(max_seq=64, slots=4)
+    prompts = [rng.integers(0, V, n) for n in (6, 5, 7, 4)]
+
+    ref, _ = _run_cluster(bundle, params, scfg, prompts)
+    out, pool = _run_cluster(bundle, params, scfg, prompts,
+                             fail=(0, 1, 3, 6))
+    assert out == ref, \
+        "membership-driven failover must not change any token stream"
+
+    eng = pool.replicas[0]
+    kinds = [e["kind"] for e in pool.metrics.events]
+    assert "suspect" in kinds and "dead" in kinds and "join" in kinds
+    # the shrink + grow both ran, driven by membership alone
+    assert eng.rt.planner.stats.elastic_shrinks == 1
+    assert eng.rt.planner.stats.elastic_grows == 1
+    assert eng.live == [0, 1, 2]               # fully healed
+    dead = next(e for e in pool.metrics.events if e["kind"] == "dead")
+    join = next(e for e in pool.metrics.events if e["kind"] == "join")
+    assert dead["replica"] == 0 and dead["rank"] == 1
+    assert dead["latency_s"] > 0
+    assert dead["migration_bytes"] > 0         # KV moved to survivors
+    assert join["migration_bytes"] > 0         # and back on the grow
+    assert dead["live"] == [0, 2] and join["live"] == [0, 1, 2]
+    # the untouched replica saw no elasticity
+    assert pool.replicas[1].rt.planner.stats.elastic_shrinks == 0
+
+
+def test_cluster_failover_under_prefix_policy(serve_model):
+    """Same gate with the prefix-aware router + engine prefix reuse on:
+    policy, reuse, and failover compose without changing streams."""
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(1)
+    scfg = ServeConfig(max_seq=64, slots=4, prefix_reuse=True)
+    shared = rng.integers(0, V, 8)
+    prompts = [np.concatenate([shared, rng.integers(0, V, k)])
+               for k in (3, 4, 5)]
+
+    def run(fail):
+        pool = ReplicaPool(bundle, params, scfg, replicas=2, instances=3,
+                           policy="prefix_aware",
+                           membership=MembershipConfig(suspect_after=1,
+                                                       dead_after=2))
+        rids = [pool.submit(p, max_new=8) for p in prompts]
+        for tick in range(1, 16):
+            if fail and tick == 2:
+                pool.inject_instance_failure(0, 2, down_for=30)
+            pool.step()
+        assert pool.pending == 0
+        return [pool.result(r) for r in rids], pool
+
+    ref, _ = run(False)
+    out, pool = run(True)
+    assert out == ref
+    # down_for outlives the run: the instance died and stayed out
+    assert pool.replicas[0].rt.planner.stats.elastic_shrinks == 1
+    assert pool.replicas[0].live == [0, 1]
+
+
+def test_cluster_never_kills_last_instance(serve_model):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(2)
+    scfg = ServeConfig(max_seq=64, slots=2)
+    pool = ReplicaPool(bundle, params, scfg, replicas=1, instances=2,
+                       membership=MembershipConfig(suspect_after=1,
+                                                   dead_after=2))
+    rid = pool.submit(rng.integers(0, V, 5), max_new=8)
+    pool.inject_instance_failure(0, 0, down_for=30)
+    pool.inject_instance_failure(0, 1, down_for=30)
+    for _ in range(12):
+        pool.step()
+    # one instance was shrunk away; the last survivor was quarantined
+    # instead of killed, and the request still completed
+    assert pool.status(rid) == "done"
+    assert len(pool.replicas[0].live) == 1
+    assert any(e["kind"] == "quarantine_skipped"
+               for e in pool.metrics.events)
+
+
+# ----------------------------------------------------------------------
+# metrics export
+# ----------------------------------------------------------------------
+def test_metrics_export_schema_and_json(serve_model, tmp_path):
+    bundle, params = serve_model
+    V = bundle.cfg.vocab
+    rng = np.random.default_rng(3)
+    scfg = ServeConfig(max_seq=64, slots=2, prefix_reuse=True)
+    pool = ReplicaPool(bundle, params, scfg, replicas=2, instances=2,
+                       policy="load_aware")
+    rids = [pool.submit(rng.integers(0, V, 4 + i), max_new=3,
+                        priority=i) for i in range(3)]
+    pool.run(max_ticks=30)
+
+    out = pool.export_metrics()
+    assert out["counts"] == {"submitted": 3, "done": 3,
+                             "cancelled": 0, "expired": 0}
+    assert out["tokens_generated"] == 9
+    assert out["throughput_tok_s"] > 0
+    assert out["ttft_s"]["p50"] > 0 and out["ttft_s"]["p99"] > 0
+    assert out["token_latency_s"]["p50"] > 0
+    for rid in rids:
+        rec = next(r for r in out["requests"] if r["rid"] == rid)
+        assert rec["status"] == "done"
+        assert rec["replica"] in (0, 1)
+        assert rec["queue_wait_ticks"] >= 0
+        assert rec["ttft_s"] >= rec["queue_wait_s"]
+        assert rec["tokens_generated"] == 3
+        assert len(rec["token_latencies_s"]) == 2   # tokens 2..3
+    assert set(out["replicas"]) == {0, 1}
+    for s in out["replicas"].values():
+        assert {"prefill_tokens_computed", "prefix_hits",
+                "prefix_tokens_reused", "live_instances",
+                "rank_steps_recorded"} <= set(s)
+
+    # round-trips through JSON on disk
+    path = tmp_path / "serve_metrics.json"
+    pool.save_metrics(str(path))
+    loaded = json.loads(path.read_text())
+    assert loaded["counts"]["done"] == 3
